@@ -1,0 +1,46 @@
+"""Paper Sec. 4.2.4: analytical architectural-parameter derivation.
+
+Validates the closed-form (SW, NUM_PE) against the paper's published
+optimum on Arria 10 GX and reports the TPU re-target (bm, bk, bn, G tiles
+under the VMEM capacity + lane-alignment constraints).
+"""
+from __future__ import annotations
+
+from repro.core.tuning import (
+    ARRIA10_GX,
+    FPGASpec,
+    TPU_V5E,
+    derive_fpga_params,
+    fpga_runtime_model,
+    tpu_tile_params,
+)
+
+
+def run(quiet: bool = False):
+    sw, num_pe = derive_fpga_params(ARRIA10_GX)
+    print(f"arch_params,arria10_gx,SW={sw},NUM_PE={num_pe},"
+          f"paper=(16,32),match={(sw, num_pe) == (16, 32)}")
+
+    # Sensitivity: a board with 2x bandwidth doubles SW, halves NUM_PE
+    # under the same logic budget (the paper's trade-off).
+    fast = FPGASpec("2x-bw", 1518, 30.0, 236e6, 512.0, 1.0)
+    sw2, pe2 = derive_fpga_params(fast)
+    print(f"arch_params,2x_bandwidth_board,SW={sw2},NUM_PE={pe2}")
+
+    # Runtime model at the optimum for a representative N_ops.
+    r = fpga_runtime_model(2e9, ARRIA10_GX, stuf=3.4e-3 * 1518 / 512)
+    print(f"arch_params,modeled_runtime_2GFLOP_ms,{r * 1e3:.1f}")
+
+    bm, bk, bn, g = tpu_tile_params(TPU_V5E)
+    print(f"arch_params,tpu_v5e_tiles,bm={bm},bk={bk},bn={bn},G={g}")
+    vmem = (g * bm * bn * 4 + 2 * bk * bn * 4 + 2 * bm * bk * 4) / 2**20
+    print(f"arch_params,tpu_v5e_vmem_MiB,{vmem:.1f} (budget "
+          f"{TPU_V5E.vmem_bytes * 0.7 / 2**20:.1f})")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Kernel microbenchmarks (interpret/jnp on CPU — correctness-scale only;
+wall-times here are NOT TPU numbers, the roofline report covers those).
+
+Reports the schedule-level reuse metrics that determine TPU performance:
+triples, B-fetch elision (block OMAR), and arithmetic intensity per kernel.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import timeit
+from repro.core.schedule import build_spgemm_schedule
+from repro.kernels import ops
+from repro.sparse.convert import to_bcsr, to_bcsv
+from repro.sparse.random import random_block_sparse
+
+
+def run(quiet: bool = False):
+    print("kernels,case,triples,b_fetches,block_omar_pct,flops,"
+          "bytes_streamed,arith_intensity")
+    for (m, k, n, da, db, g) in [
+        (512, 512, 512, 0.2, 0.2, 2),
+        (1024, 512, 1024, 0.1, 0.15, 4),
+        (512, 1024, 512, 0.3, 0.3, 8),
+    ]:
+        bm = bk = bn = 128
+        ad = random_block_sparse(m, k, (bm, bk), da, seed=1)
+        bd = random_block_sparse(k, n, (bk, bn), db, seed=2)
+        a = to_bcsv(ad, (bm, bk), group=g)
+        b = to_bcsr(bd, (bk, bn))
+        s = build_spgemm_schedule(a, b)
+        flops = 2 * s.num_triples * bm * bk * bn
+        # HBM bytes: A streamed once; B fetched per elided schedule; C
+        # panels written once.
+        bytes_ = (a.nnzb * bm * bk + s.b_fetches() * bk * bn
+                  + s.n_panels * g * bm * bn) * 4
+        ai = flops / bytes_
+        print(f"kernels,spgemm_{m}x{k}x{n}_g{g},{s.num_triples},"
+              f"{s.b_fetches()},{s.block_omar():.1f},{flops:.2e},"
+              f"{bytes_:.2e},{ai:.1f}")
+
+    # correctness spot (pallas interpret vs dense) as part of the bench
+    ad = random_block_sparse(256, 256, (64, 64), 0.3, seed=3)
+    bd = random_block_sparse(256, 256, (64, 64), 0.3, seed=4)
+    c = ops.spgemm(to_bcsv(ad, (64, 64), 2), to_bcsr(bd, (64, 64)),
+                   backend="pallas_interpret")
+    err = np.abs(c.todense() - ad @ bd).max()
+    print(f"kernels,spgemm_pallas_interpret_maxerr,{err:.2e}")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Paper Table 7: SpGEMM runtime comparison.
+
+This container measures the CPU implementations (our vectorized Gustavson =
+the MKL analogue, plus scipy's SpGEMM when available); the FPGA number is
+modeled from the paper's Eq. 2 runtime model driven by the published STUF
+(Table 8), with the paper's measured table reprinted alongside. Labels make
+measured-vs-modeled explicit.
+"""
+from __future__ import annotations
+
+from benchmarks.common import timeit
+from repro.core.gustavson import gustavson_flops, spgemm_gustavson
+from repro.core.perfmodel import (
+    FPGA_ARRIA10,
+    PAPER_MATRICES,
+    PAPER_TABLE7_MS,
+    PAPER_TABLE8_STUF,
+    runtime_from_stuf,
+)
+from repro.sparse.random import suite_matrix
+
+
+def run(scale: float = 0.05, quiet: bool = False):
+    rows = []
+    print("runtime,matrix,ours_cpu_ms(measured),scipy_ms(measured),"
+          "fpga_ms(modeled@paper_stuf),paper_mkl_ms,paper_cusparse_ms,"
+          "paper_fspgemm_ms")
+    for name in PAPER_MATRICES:
+        a = suite_matrix(name, scale=scale)
+        ours = timeit(spgemm_gustavson, a, a) * 1e3
+        try:
+            sp = a.to_scipy()
+            scipy_ms = timeit(lambda: sp @ sp) * 1e3
+        except ImportError:
+            scipy_ms = float("nan")
+        n_ops = gustavson_flops(a, a)
+        fpga_ms = runtime_from_stuf(
+            n_ops, FPGA_ARRIA10, PAPER_TABLE8_STUF[name]["fspgemm"]) * 1e3
+        p = PAPER_TABLE7_MS[name]
+        rows.append((name, ours, scipy_ms, fpga_ms))
+        print(f"runtime,{name},{ours:.2f},{scipy_ms:.2f},{fpga_ms:.3f},"
+              f"{p['mkl']},{p['cusparse']},{p['fspgemm']}")
+    # Scale-adjusted speedup estimate (work scales with nnz expansion).
+    speedups = []
+    for name, ours, _, fpga in rows:
+        p = PAPER_TABLE7_MS[name]
+        speedups.append(p["mkl"] / p["fspgemm"])
+    gm = 1.0
+    for s in speedups:
+        gm *= s
+    print(f"runtime,paper_avg_speedup_vs_cpu,{sum(speedups)/len(speedups):.2f}"
+          f" (paper reports 4.9x)")
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Tuple
+
+
+def timeit(fn: Callable, *args, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall-time in seconds."""
+    for _ in range(warmup):
+        fn(*args)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def fmt_row(*cols, widths=None) -> str:
+    widths = widths or [18] * len(cols)
+    return "  ".join(str(c)[: w].ljust(w) for c, w in zip(cols, widths))

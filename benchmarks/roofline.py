@@ -1,0 +1,122 @@
+"""Roofline analysis (§Roofline): three terms per (arch x shape x mesh)
+derived from the dry-run artifacts.
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOPs
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = collective_bytes_per_chip / (links_per_chip * link_bw)
+
+``compiled.cost_analysis()`` on the SPMD-partitioned module reports
+*per-device* FLOPs/bytes; collective bytes are parsed from the per-device
+HLO, so all three terms are per-chip seconds directly. Corrected values
+(scan trip counts resolved, DESIGN.md Sec. 6) are used when present.
+
+Hardware constants (TPU v5e-class): 197 TFLOP/s bf16, 819 GB/s HBM,
+50 GB/s/link ICI with ~3 usable links per chip on a 2D torus slice.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+LINKS = 3
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_cells(art_dir: str = ART_DIR, mesh: str = "pod16x16") -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(art_dir, f"*__{mesh}.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def terms(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    cor = rec.get("corrected") or {}
+    flops = cor.get("flops", rec["cost"]["flops"])
+    bytes_ = cor.get("bytes", rec["cost"]["bytes"])
+    coll = cor.get("collective_bytes")
+    if coll is None:
+        coll = sum(v["bytes"] for v in rec.get("collectives", {}).values())
+    t_c = flops / PEAK_FLOPS
+    t_m = bytes_ / HBM_BW
+    t_x = coll / (LINKS * LINK_BW)
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    chips = 1
+    for v in rec.get("mesh", {}).values():
+        chips *= v
+    model_per_chip = rec.get("model", {}).get("model_flops", 0.0) / max(chips, 1)
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "microbatches": rec.get("microbatches", 1),
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "collective_s": t_x,
+        "dominant": dom,
+        "bound_s": max(t_c, t_m, t_x),
+        "roofline_fraction": t_c / max(t_c, t_m, t_x) if max(t_c, t_m, t_x) else 0.0,
+        "model_flops_per_chip": model_per_chip,
+        "useful_ratio": model_per_chip / flops if flops else 0.0,
+        "peak_GiB": rec["memory"]["peak_bytes"] / 2**30,
+        "peak_GiB_tpu_adj": rec["memory"].get(
+            "peak_bytes_tpu_adjusted", rec["memory"]["peak_bytes"]) / 2**30,
+        "hlo_flops": flops,
+        "hlo_bytes": bytes_,
+        "coll_bytes": coll,
+    }
+
+
+_SUGGEST = {
+    "compute": "compute-bound: raise MXU utilization (larger tiles, fewer "
+               "pad-wasted heads) or shrink redundant recompute",
+    "memory": "HBM-bound: raise arithmetic intensity (fuse, larger "
+              "microbatch, cache-resident accumulation, bf16 end-to-end)",
+    "collective": "ICI-bound: cut wire bytes (bf16/int8 reductions, "
+                  "hierarchical pod reduction) or overlap with compute",
+}
+
+
+def report(art_dir: str = ART_DIR, mesh: str = "pod16x16") -> List[Dict]:
+    rows = []
+    print("roofline,arch,shape,u,compute_s,memory_s,collective_s,dominant,"
+          "roofline_frac,useful_ratio,peak_GiB,peak_GiB_adj")
+    for rec in load_cells(art_dir, mesh):
+        t = terms(rec)
+        if t is None:
+            print(f"roofline,{rec['arch']},{rec['shape']},-,-,-,-,"
+                  f"{rec.get('status')},-,-,-,-")
+            continue
+        rows.append(t)
+        print(
+            f"roofline,{t['arch']},{t['shape']},{t['microbatches']},"
+            f"{t['compute_s']:.3e},{t['memory_s']:.3e},"
+            f"{t['collective_s']:.3e},{t['dominant']},"
+            f"{t['roofline_fraction']:.3f},{t['useful_ratio']:.3f},"
+            f"{t['peak_GiB']:.2f},{t['peak_GiB_tpu_adj']:.2f}"
+        )
+    if rows:
+        for dom in ("compute", "memory", "collective"):
+            n = sum(1 for r in rows if r["dominant"] == dom)
+            print(f"roofline,summary,{dom}_bound_cells,{n}")
+        worst = min(rows, key=lambda r: r["roofline_fraction"])
+        print(f"roofline,summary,worst_fraction,{worst['arch']},"
+              f"{worst['shape']},{worst['roofline_fraction']:.3f}")
+        print(f"roofline,hint,{_SUGGEST[worst['dominant']]}")
+    return rows
+
+
+def main():
+    report()
+
+
+if __name__ == "__main__":
+    main()

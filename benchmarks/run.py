@@ -1,0 +1,44 @@
+"""Benchmark driver: one section per paper table/figure + the roofline
+report. ``PYTHONPATH=src python -m benchmarks.run``"""
+from __future__ import annotations
+
+import traceback
+
+from benchmarks import (
+    bench_arch_params,
+    bench_energy,
+    bench_kernels,
+    bench_omar,
+    bench_runtime,
+    bench_stuf,
+    roofline,
+)
+
+SECTIONS = [
+    ("Fig 6 — OMAR vs NUM_PE", bench_omar.main),
+    ("Table 7 — runtime", bench_runtime.main),
+    ("Table 8 — STUF", bench_stuf.main),
+    ("Table 9 / Fig 8 — energy", bench_energy.main),
+    ("Sec 4.2.4 — architectural parameters", bench_arch_params.main),
+    ("Kernel schedule metrics", bench_kernels.main),
+    ("Roofline (from dry-run artifacts)", roofline.main),
+]
+
+
+def main() -> None:
+    failures = []
+    for title, fn in SECTIONS:
+        print(f"\n=== {title} " + "=" * max(1, 60 - len(title)))
+        try:
+            fn()
+        except Exception as e:
+            failures.append(title)
+            print(f"SECTION FAILED: {type(e).__name__}: {e}")
+            traceback.print_exc()
+    print("\n=== benchmarks done"
+          + (f" ({len(failures)} section(s) failed: {failures})"
+             if failures else " (all sections passed)"))
+
+
+if __name__ == "__main__":
+    main()

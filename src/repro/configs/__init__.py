@@ -1,0 +1,2 @@
+"""Architecture configs (one module per assigned arch) + registry."""
+from repro.configs.registry import ARCHS, get_config, get_reduced, SHAPES

@@ -1,0 +1,6 @@
+"""The paper's evaluation set (Table 4) as a config, re-exported from
+sparse/random.py where the synthetic generators live."""
+from repro.core.perfmodel import PAPER_MATRICES
+from repro.sparse.random import SUITE, suite_matrix
+
+__all__ = ["PAPER_MATRICES", "SUITE", "suite_matrix"]

@@ -1,0 +1,169 @@
+"""Host symbolic phase: static block schedules for the Pallas kernels.
+
+The paper's host program converts A to CSV once (Sec. 4.3); the FPGA kernel
+then streams it with data-dependent control flow (FIFOs, RESET tokens).
+TPUs have no data-dependent grids, so the host side here additionally runs
+the *symbolic* half of Gustavson's algorithm at block granularity: it
+computes the output block structure and flattens the whole computation into
+a static stream of (a_slot, b_slot, panel, sub_row) matmul triples.
+
+Triple ordering = the paper's schedule, lifted to tiles:
+
+    for each block-row group g (NUM_PE analogue):        # CSV row groups
+      for each output block-column j of the group:       # one C panel
+        for each inner block k with A(g-rows, k)≠0 ∧ B(k, j)≠0:
+          fetch B(k, j) once                             # shared buffer
+          for each row r in group with A(r, k)≠0:        # PEs in parallel
+            C_panel(g, j)[r] += A(r, k) · B(k, j)
+
+Consecutive triples share ``b_slot`` exactly when the paper's buffering
+scheme would share a fetched B row, and every C panel is visited in one
+contiguous run (safe Pallas output revisiting).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.sparse.formats import BCSR, BCSV
+
+__all__ = ["SpGEMMSchedule", "build_spgemm_schedule"]
+
+
+@dataclasses.dataclass
+class SpGEMMSchedule:
+    """Flat static schedule consumed by kernels/gustavson_spgemm.py."""
+
+    # Per-triple arrays, length T (padded to T_pad by the kernel wrapper).
+    a_slot: np.ndarray  # index into packed A blocks [nnzb_a, bm, bk]
+    b_slot: np.ndarray  # index into packed B blocks [nnzb_b, bk, bn]
+    panel: np.ndarray  # index into output panels [n_panels, G*bm, bn]
+    sub_row: np.ndarray  # block-row within the group (0..G-1)
+    start: np.ndarray  # 1 iff first triple of its panel (zero the acc)
+    # Panel -> C-block mapping (host-side scatter after the kernel).
+    panel_group: np.ndarray  # [n_panels] block-row group id
+    panel_bcol: np.ndarray  # [n_panels] C block-column
+    # C block structure (symbolic Gustavson result).
+    c_brow: np.ndarray  # [nnzb_c]
+    c_bcol: np.ndarray  # [nnzb_c]
+    group: int
+    grid_m: int  # A block-rows
+    grid_n: int  # B block-cols
+    grid_k: int
+
+    @property
+    def num_triples(self) -> int:
+        return int(self.a_slot.shape[0])
+
+    @property
+    def n_panels(self) -> int:
+        return int(self.panel_group.shape[0])
+
+    @property
+    def nnzb_c(self) -> int:
+        return int(self.c_brow.shape[0])
+
+    def b_fetches(self) -> int:
+        """Number of B-block HBM fetches under revisit elision."""
+        if self.num_triples == 0:
+            return 0
+        change = np.empty(self.num_triples, dtype=bool)
+        change[0] = True
+        change[1:] = self.b_slot[1:] != self.b_slot[:-1]
+        return int(change.sum())
+
+    def block_omar(self) -> float:
+        """Scheduled-level OMAR: saved B fetches / naive fetches (Eq. 1)."""
+        t = self.num_triples
+        if t == 0:
+            return 0.0
+        return 100.0 * (t - self.b_fetches()) / t
+
+
+def build_spgemm_schedule(a: BCSV, b: BCSR) -> SpGEMMSchedule:
+    """Symbolic block-Gustavson: structure of C + the triple schedule."""
+    bm, bk = a.block_shape
+    bk2, bn = b.block_shape
+    if bk != bk2:
+        raise ValueError(f"block inner dims mismatch: {a.block_shape} vs {b.block_shape}")
+    if a.shape[1] != b.shape[0]:
+        raise ValueError(f"matrix inner dims mismatch: {a.shape} vs {b.shape}")
+    grid_m, grid_k = a.grid
+    grid_n = b.grid[1]
+    group = a.group
+
+    # Index A blocks by (group, k) -> [(sub_row, slot)...], preserving BCSV
+    # (vector-major) order inside each group.
+    a_by_group_k: Dict[Tuple[int, int], List[Tuple[int, int]]] = {}
+    for slot in range(a.nnzb):
+        g = int(a.brow[slot]) // group
+        k = int(a.bcol[slot])
+        a_by_group_k.setdefault((g, k), []).append((int(a.brow[slot]) - g * group, slot))
+
+    # Index B blocks by (k, j) -> slot.
+    b_slot_of: Dict[Tuple[int, int], int] = {}
+    for kb in range(b.indptr.shape[0] - 1):
+        for s in range(int(b.indptr[kb]), int(b.indptr[kb + 1])):
+            b_slot_of[(kb, int(b.indices[s]))] = s
+
+    n_groups = a.n_groups
+    a_slots: List[int] = []
+    b_slots: List[int] = []
+    panels: List[int] = []
+    sub_rows: List[int] = []
+    starts: List[int] = []
+    panel_group: List[int] = []
+    panel_bcol: List[int] = []
+    c_blocks: set = set()
+
+    for g in range(n_groups):
+        # ks present in this group, in ascending k (the CSV vector order).
+        ks = sorted({k for (gg, k) in a_by_group_k if gg == g})
+        if not ks:
+            continue
+        # Output block-columns reachable from this group: ∪_k cols(B(k,:)).
+        js = sorted(
+            {
+                int(b.indices[s])
+                for k in ks
+                for s in range(int(b.indptr[k]), int(b.indptr[k + 1]))
+            }
+        )
+        for j in js:
+            first = True
+            for k in ks:
+                bs = b_slot_of.get((k, j))
+                if bs is None:
+                    continue
+                for sub_row, a_s in a_by_group_k[(g, k)]:
+                    a_slots.append(a_s)
+                    b_slots.append(bs)
+                    panels.append(len(panel_group))
+                    sub_rows.append(sub_row)
+                    starts.append(1 if first else 0)
+                    first = False
+                    c_blocks.add((g * group + sub_row, j))
+            if not first:  # at least one triple was emitted for this panel
+                panel_group.append(g)
+                panel_bcol.append(j)
+
+    c_sorted = sorted(c_blocks)
+    c_brow = np.asarray([r for r, _ in c_sorted], np.int32)
+    c_bcol = np.asarray([c for _, c in c_sorted], np.int32)
+    return SpGEMMSchedule(
+        a_slot=np.asarray(a_slots, np.int32),
+        b_slot=np.asarray(b_slots, np.int32),
+        panel=np.asarray(panels, np.int32),
+        sub_row=np.asarray(sub_rows, np.int32),
+        start=np.asarray(starts, np.int32),
+        panel_group=np.asarray(panel_group, np.int32),
+        panel_bcol=np.asarray(panel_bcol, np.int32),
+        c_brow=c_brow,
+        c_bcol=c_bcol,
+        group=group,
+        grid_m=grid_m,
+        grid_n=grid_n,
+        grid_k=grid_k,
+    )

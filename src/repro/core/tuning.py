@@ -1,0 +1,157 @@
+"""Analytical architectural-parameter models (paper Sec. 4.2.4).
+
+FPGA side (paper-faithful): runtime R = N_Ops / (F · SW · NUM_PE · U);
+subject to bandwidth  f1(SW) = sizeof(float)·SW·F ≤ C1
+and logic              f2(SW, NUM_PE) = β·SW·NUM_PE ≤ C2,
+with the paper's closed-form optimum
+    SW      = ceil(C1 / (sizeof(float)·F))
+    NUM_PE  = ceil(C2 / (β·SW))
+validated to reproduce the published SW=16, NUM_PE=32 on Arria 10 GX.
+
+TPU side (hardware adaptation, DESIGN.md Sec. 2): the same two-constraint
+structure re-targeted at tile shapes — the bandwidth constraint bounds the
+streaming width (lane-aligned bn), the capacity constraint (VMEM instead of
+logic) bounds the row-group panel G·bm·bn. ``tpu_tile_params`` returns MXU-
+aligned (bm, bk, bn, G) maximizing modeled throughput.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+__all__ = [
+    "FPGASpec",
+    "ARRIA10_GX",
+    "derive_fpga_params",
+    "fpga_runtime_model",
+    "TPUSpec",
+    "TPU_V5E",
+    "tpu_tile_params",
+]
+
+
+# ---------------------------------------------------------------------------
+# FPGA model (paper-faithful)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FPGASpec:
+    """Board constants (paper Table 5 for Arria 10 GX)."""
+
+    name: str
+    dsp_count: int
+    mem_bandwidth_GBs: float  # C1
+    clock_Hz: float  # F (achieved kernel clock)
+    logic_capacity: float  # C2 (normalized logic units)
+    beta: float  # fitted logic per unit parallelism (Sec. 4.2.4)
+
+
+# The paper reports SW=16, NUM_PE=32 at 236 MHz with logic the binding
+# constraint (97% logic @ 36% DSP).  β is back-fitted so the published
+# optimum is reproduced: C2/β = SW·NUM_PE = 512.
+ARRIA10_GX = FPGASpec(
+    name="arria10-gx",
+    dsp_count=1518,
+    mem_bandwidth_GBs=15.0,
+    clock_Hz=236e6,
+    logic_capacity=512.0,
+    beta=1.0,
+)
+
+
+def derive_fpga_params(spec: FPGASpec, float_bytes: int = 4) -> Tuple[int, int]:
+    """Closed-form (SW, NUM_PE) per Sec. 4.2.4.
+
+    SW = ceil(C1 / (sizeof(float) · F)); NUM_PE = ceil(C2 / (β · SW)).
+    """
+    sw = math.ceil(spec.mem_bandwidth_GBs * 1e9 / (float_bytes * spec.clock_Hz))
+    num_pe = math.ceil(spec.logic_capacity / (spec.beta * sw))
+    return sw, num_pe
+
+
+def fpga_runtime_model(
+    n_ops: int,
+    spec: FPGASpec,
+    sw: Optional[int] = None,
+    num_pe: Optional[int] = None,
+    stuf: float = 1.0,
+) -> float:
+    """Paper Eq. 2: R = N_Ops / (F · SW · NUM_PE · U)  [seconds].
+
+    Note each DSP does a multiply+add per cycle, i.e. 2 FLOPs; N_Ops counts
+    FLOPs, and SW·NUM_PE DSPs provide 2·SW·NUM_PE FLOPs/cycle. The paper
+    lumps the 2 into U's definition of parallelism P; we follow the paper:
+    P (computational parallelism) = 2 · #DSP-equivalents for STUF purposes,
+    but Eq. 2 uses SW·NUM_PE MACs/cycle = 2·SW·NUM_PE FLOPs/cycle.
+    """
+    sw = sw if sw is not None else derive_fpga_params(spec)[0]
+    num_pe = num_pe if num_pe is not None else derive_fpga_params(spec)[1]
+    flops_per_cycle = 2.0 * sw * num_pe * stuf
+    return n_ops / (spec.clock_Hz * flops_per_cycle)
+
+
+# ---------------------------------------------------------------------------
+# TPU re-target
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TPUSpec:
+    name: str
+    peak_flops: float  # bf16 FLOP/s per chip
+    hbm_bandwidth: float  # bytes/s per chip
+    ici_bandwidth: float  # bytes/s per link
+    vmem_bytes: int  # per-core VMEM budget
+    mxu_dim: int  # systolic array edge (tile alignment)
+    lane: int  # vector lane count (last-dim alignment)
+    sublane: int  # second-minor alignment for fp32
+
+
+TPU_V5E = TPUSpec(
+    name="tpu-v5e",
+    peak_flops=197e12,
+    hbm_bandwidth=819e9,
+    ici_bandwidth=50e9,
+    vmem_bytes=16 * 2**20,  # ~16 MiB usable VMEM per core
+    mxu_dim=128,
+    lane=128,
+    sublane=8,
+)
+
+
+def tpu_tile_params(
+    spec: TPUSpec = TPU_V5E,
+    dtype_bytes: int = 4,
+    bn_target: Optional[int] = None,
+    vmem_fraction: float = 0.7,
+) -> Tuple[int, int, int, int]:
+    """(bm, bk, bn, G) for the block-Gustavson kernels.
+
+    Mirrors Sec. 4.2.4's two constraints:
+      * streaming constraint — bn is the widest lane-aligned tile such that
+        the B-stream bandwidth need ≤ HBM bandwidth at full MXU rate (on
+        TPU this is trivially satisfied up to the VMEM bound, so bn is
+        capacity-limited in practice, like the paper's SW was bandwidth-
+        limited on the much slower DDR);
+      * capacity constraint — the C accumulator panel (G·bm × bn), one B
+        tile (bk × bn) and double buffers must fit ``vmem_fraction`` of
+        VMEM; G (the NUM_PE analogue) is the largest group satisfying it.
+    """
+    bm = bk = spec.mxu_dim
+    budget = spec.vmem_bytes * vmem_fraction
+    bn = bn_target or spec.lane * 4  # 512 default: MXU-efficient N tile
+    bn = max(spec.lane, (bn // spec.lane) * spec.lane)
+
+    def footprint(g: int, bn_: int) -> float:
+        acc = g * bm * bn_ * dtype_bytes  # C panel (single-buffered output)
+        b_tile = 2 * bk * bn_ * dtype_bytes  # double-buffered B tile
+        a_tile = 2 * bm * bk * dtype_bytes  # double-buffered A block
+        return acc + b_tile + a_tile
+
+    g = 1
+    while footprint(g * 2, bn) <= budget:
+        g *= 2
+    # If even G=1 does not fit, shrink bn.
+    while footprint(g, bn) > budget and bn > spec.lane:
+        bn //= 2
+    return bm, bk, bn, g

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the FSpGEMM hot-spots + jnp oracles.
+
+Kernels (each with explicit BlockSpec VMEM tiling, validated in
+interpret mode against ref.py):
+
+* ``gustavson_spgemm`` — the paper's FPGA kernel adapted to TPU: static
+  triple-scheduled block-Gustavson SpGEMM with CSV-order streaming.
+* ``bsr_spmm`` — block-sparse weights x dense activations (SparseLinear).
+* ``moe_gmm`` — grouped matmul over expert-sorted tokens (MoE dispatch).
+* ``flash_attention`` — online-softmax tiled attention (prefill).
+"""
+from repro.kernels import ops, ref

@@ -1,0 +1,146 @@
+"""Block-Gustavson SpGEMM Pallas kernel (the paper's FPGA kernel on TPU).
+
+Hardware adaptation (DESIGN.md Sec. 2): the FPGA's NUM_PE parallel PEs with
+a shared B-row buffer become a *static triple schedule* executed by a Pallas
+grid. Each grid step t performs one (bm x bk) @ (bk x bn) MXU matmul:
+
+    panels[panel[t]][sub_row[t]*bm : (sub_row[t]+1)*bm, :] += A[a_slot[t]] @ B[b_slot[t]]
+
+The schedule (core/schedule.py) is in BCSV vector-major order, so
+
+* the packed A-blocks array is streamed **sequentially** from HBM — the CSV
+  format's "regular access pattern" (paper Sec. 3);
+* consecutive triples sharing ``b_slot`` hit the Pallas revisit-elision: the
+  B block stays in VMEM and is **not** re-fetched — the paper's Sec. 4.1
+  buffering scheme, with OMAR (Eq. 1) counting exactly the elided copies;
+* each output panel (the G·bm x bn accumulator = the union of the G PEs'
+  double buffers) is visited in one contiguous run, so it lives in VMEM for
+  the whole run and is written back to HBM once.
+
+Scalar prefetch (PrefetchScalarGridSpec) plays the role of the load kernel's
+scheduling side-channel (A_DS of Table 1): slot/panel/sub-row indices are
+resident in SMEM before the grid body runs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["spgemm_scheduled", "pad_schedule_arrays"]
+
+
+def _kernel(
+    # scalar prefetch (SMEM)
+    a_slot_ref,
+    b_slot_ref,
+    panel_ref,
+    sub_row_ref,
+    start_ref,
+    # VMEM blocks
+    a_ref,  # [1, bm, bk]
+    b_ref,  # [1, bk, bn]
+    o_ref,  # [1, G*bm, bn]
+    *,
+    bm: int,
+):
+    t = pl.program_id(0)
+    # Zero the whole panel on its first triple (paper: PE buffers reset on
+    # row change / RESET token).
+    @pl.when(start_ref[t] == 1)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    prod = jnp.dot(
+        a_ref[0].astype(jnp.float32),
+        b_ref[0].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    row0 = sub_row_ref[t] * bm
+    cur = o_ref[0, pl.dslice(row0, bm), :]
+    o_ref[0, pl.dslice(row0, bm), :] = cur + prod.astype(o_ref.dtype)
+
+
+def pad_schedule_arrays(
+    a_slot: np.ndarray,
+    b_slot: np.ndarray,
+    panel: np.ndarray,
+    sub_row: np.ndarray,
+    start: np.ndarray,
+    n_panels: int,
+    pad_to: int | None = None,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray, int]:
+    """Pad the triple schedule to a fixed length with dummy-panel triples.
+
+    Padding triples write to panel ``n_panels`` (an extra scratch panel the
+    wrapper strips), with start=1 so they never accumulate garbage.
+    """
+    t = int(a_slot.shape[0])
+    t_pad = pad_to if pad_to is not None else max(1, t)
+    if t_pad < t:
+        raise ValueError(f"pad_to={t_pad} < schedule length {t}")
+    pad = t_pad - t
+
+    def _p(x, fill):
+        return np.concatenate([x, np.full(pad, fill, x.dtype)]) if pad else x
+
+    return (
+        _p(a_slot, 0),
+        _p(b_slot, 0),
+        _p(panel, n_panels),
+        _p(sub_row, 0),
+        _p(start, 1),
+        t_pad,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_panels", "group", "interpret"),
+)
+def spgemm_scheduled(
+    a_blocks: jax.Array,  # [nnzb_a, bm, bk] packed BCSV blocks (stream order)
+    b_blocks: jax.Array,  # [nnzb_b, bk, bn] packed BCSR blocks
+    a_slot: jax.Array,  # [T] int32
+    b_slot: jax.Array,  # [T] int32
+    panel: jax.Array,  # [T] int32 (dummy = n_panels)
+    sub_row: jax.Array,  # [T] int32 in [0, group)
+    start: jax.Array,  # [T] int32 {0,1}
+    *,
+    n_panels: int,
+    group: int,
+    interpret: bool = True,
+) -> jax.Array:
+    """Run the scheduled block-Gustavson SpGEMM.
+
+    Returns panels [n_panels, group*bm, bn] float32 (dummy panel stripped).
+    """
+    t_pad = a_slot.shape[0]
+    bm, bk = a_blocks.shape[1], a_blocks.shape[2]
+    bn = b_blocks.shape[2]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(t_pad,),
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda t, a_s, b_s, p, sr, st: (a_s[t], 0, 0)),
+            pl.BlockSpec((1, bk, bn), lambda t, a_s, b_s, p, sr, st: (b_s[t], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, group * bm, bn), lambda t, a_s, b_s, p, sr, st: (p[t], 0, 0)
+        ),
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, bm=bm),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_panels + 1, group * bm, bn), jnp.float32),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+    )(a_slot, b_slot, panel, sub_row, start, a_blocks, b_blocks)
+    return out[:n_panels]

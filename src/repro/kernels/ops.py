@@ -1,0 +1,244 @@
+"""Public jit'd wrappers around the Pallas kernels + jnp fallbacks.
+
+Backend policy (DESIGN.md Sec. 2): Pallas kernels target TPU; this container
+is CPU-only, so ``backend="auto"`` selects
+
+* ``"pallas"`` (interpret=False) on a real TPU backend,
+* ``"jnp"`` (the ref.py oracle path, pure XLA) elsewhere — used by the
+  multi-pod dry-run so collected HLO FLOPs/bytes reflect honest dense math.
+
+Tests force ``backend="pallas_interpret"`` to execute the kernel bodies in
+interpret mode on CPU and allclose them against the oracles.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.schedule import SpGEMMSchedule, build_spgemm_schedule
+from repro.kernels import ref
+from repro.kernels.bsr_spmm import bsr_spmm, plan_bsr
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gustavson_spgemm import pad_schedule_arrays, spgemm_scheduled
+from repro.kernels.moe_gmm import moe_gmm
+from repro.sparse.formats import BCSR, BCSV, COO, CSR
+
+__all__ = [
+    "resolve_backend",
+    "spgemm",
+    "sparse_dense_matmul",
+    "grouped_matmul",
+    "attention",
+]
+
+
+def resolve_backend(backend: str = "auto") -> str:
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend not in ("pallas", "pallas_interpret", "jnp"):
+        raise ValueError(f"unknown backend {backend!r}")
+    return backend
+
+
+# ---------------------------------------------------------------------------
+# Sparse x sparse: the paper's SpGEMM, end to end
+# ---------------------------------------------------------------------------
+
+def spgemm(
+    a: BCSV,
+    b: BCSR,
+    *,
+    backend: str = "auto",
+    schedule: Optional[SpGEMMSchedule] = None,
+) -> CSR:
+    """C = A @ B for block-sparse A (BCSV) and B (BCSR).
+
+    Host symbolic phase (the paper's pre-processing, Sec. 4.3) builds the
+    static triple schedule; the device phase runs the scheduled kernel; the
+    host scatters the output panels into C's block structure.
+    """
+    backend = resolve_backend(backend)
+    sch = schedule if schedule is not None else build_spgemm_schedule(a, b)
+    bm, bk = a.block_shape
+    bn = b.block_shape[1]
+    group = a.group
+    if sch.num_triples == 0:
+        m, n = a.shape[0], b.shape[1]
+        return CSR(np.zeros(m + 1, np.int64), np.zeros(0, np.int32),
+                   np.zeros(0, np.float32), (m, n))
+
+    if backend in ("pallas", "pallas_interpret"):
+        a_slot, b_slot, panel, sub_row, start, _ = pad_schedule_arrays(
+            sch.a_slot, sch.b_slot, sch.panel, sch.sub_row, sch.start,
+            sch.n_panels,
+        )
+        panels = spgemm_scheduled(
+            jnp.asarray(a.blocks),
+            jnp.asarray(b.blocks),
+            jnp.asarray(a_slot),
+            jnp.asarray(b_slot),
+            jnp.asarray(panel),
+            jnp.asarray(sub_row),
+            jnp.asarray(start),
+            n_panels=sch.n_panels,
+            group=group,
+            interpret=(backend == "pallas_interpret"
+                       or jax.default_backend() != "tpu"),
+        )
+    else:
+        panels = ref.spgemm_scheduled_ref(
+            jnp.asarray(a.blocks), jnp.asarray(b.blocks),
+            sch.a_slot, sch.b_slot, sch.panel, sch.sub_row,
+            sch.n_panels, group,
+        )
+    panels = np.asarray(panels)
+
+    # Host scatter: panels -> C dense blocks -> CSR (paper's store kernel +
+    # host read-back).
+    m, n = a.shape[0], b.shape[1]
+    out = np.zeros((m, n), np.float32)
+    for p in range(sch.n_panels):
+        g = int(sch.panel_group[p])
+        j = int(sch.panel_bcol[p])
+        r0 = g * group * bm
+        rows = min(group * bm, m - r0)
+        out[r0 : r0 + rows, j * bn : (j + 1) * bn] = panels[p][:rows]
+    return CSR.from_coo(COO.fromdense(out))
+
+
+# ---------------------------------------------------------------------------
+# Sparse weights x dense activations (SparseLinear forward)
+# ---------------------------------------------------------------------------
+
+def sparse_dense_matmul(
+    x: jax.Array,  # [M, K]
+    w: BCSV,  # [K, N] block-sparse weight
+    *,
+    backend: str = "auto",
+    tm: int = 128,
+) -> jax.Array:
+    """y = x @ W with W block-sparse (zero column panels handled)."""
+    backend = resolve_backend(backend)
+    bk, bn = w.block_shape
+    k, n = w.shape
+    assert x.shape[1] == k
+    # W is stored row-group-major (BCSV over K); the SpMM kernel wants
+    # column-panel-major with every N panel covered.
+    order, brow, bcol, flags = plan_bsr(w.brow, w.bcol)
+    blocks = w.blocks[order]
+    # Pad a zero block for every absent column panel.
+    present = np.zeros(n // bn, bool)
+    present[bcol] = True
+    missing = np.nonzero(~present)[0].astype(np.int32)
+    if missing.size:
+        blocks = np.concatenate(
+            [blocks, np.zeros((missing.size, bk, bn), blocks.dtype)]
+        )
+        brow = np.concatenate([brow, np.zeros(missing.size, np.int32)])
+        bcol = np.concatenate([bcol, missing])
+        flags = np.concatenate([flags, np.full(missing.size, 3, np.int32)])
+        order2 = np.lexsort((brow, bcol))
+        blocks, brow, bcol, flags = (
+            blocks[order2], brow[order2], bcol[order2], flags[order2]
+        )
+
+    m = x.shape[0]
+    pad_m = (-m) % tm
+    xp = jnp.pad(x, ((0, pad_m), (0, 0))) if pad_m else x
+
+    if backend in ("pallas", "pallas_interpret"):
+        y = bsr_spmm(
+            xp,
+            jnp.asarray(blocks),
+            jnp.asarray(brow),
+            jnp.asarray(bcol),
+            jnp.asarray(flags),
+            n=n,
+            tm=tm,
+            interpret=(backend == "pallas_interpret"
+                       or jax.default_backend() != "tpu"),
+        )
+    else:
+        y = ref.bsr_spmm_ref(xp, jnp.asarray(blocks), brow, bcol, n)
+    return y[:m] if pad_m else y
+
+
+# ---------------------------------------------------------------------------
+# Grouped matmul (MoE dispatch)
+# ---------------------------------------------------------------------------
+
+def grouped_matmul(
+    x: jax.Array,  # [T, D] tokens sorted by expert (padded per expert)
+    w: jax.Array,  # [E, D, F]
+    tile_expert: jax.Array,  # [T // tm]
+    *,
+    tm: int = 128,
+    backend: str = "auto",
+) -> jax.Array:
+    backend = resolve_backend(backend)
+    if backend in ("pallas", "pallas_interpret"):
+        d, f = w.shape[1], w.shape[2]
+        return moe_gmm(
+            x, w, tile_expert,
+            tm=tm,
+            bd=min(512, d) if d % min(512, d) == 0 else d,
+            bf=min(512, f) if f % min(512, f) == 0 else f,
+            interpret=(backend == "pallas_interpret"
+                       or jax.default_backend() != "tpu"),
+        )
+    return ref.moe_gmm_ref(x, w, np.asarray(tile_expert), tm)
+
+
+# ---------------------------------------------------------------------------
+# Attention (prefill hot-spot) with a recompute-based VJP
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.custom_vjp,
+    nondiff_argnums=(3, 4, 5, 6),
+)
+def attention(
+    q: jax.Array,  # [BH, Sq, D]
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    backend: str = "auto",
+) -> jax.Array:
+    be = resolve_backend(backend)
+    if be in ("pallas", "pallas_interpret"):
+        return flash_attention(
+            q, k, v,
+            causal=causal, window=window, q_offset=q_offset,
+            interpret=(be == "pallas_interpret"
+                       or jax.default_backend() != "tpu"),
+        ).astype(q.dtype)
+    return ref.flash_attention_ref(
+        q, k, v, causal=causal, window=window, q_offset=q_offset
+    ).astype(q.dtype)
+
+
+def _attention_fwd(q, k, v, causal, window, q_offset, backend):
+    out = attention(q, k, v, causal, window, q_offset, backend)
+    return out, (q, k, v)
+
+
+def _attention_bwd(causal, window, q_offset, backend, res, g):
+    q, k, v = res
+    # Recompute-based backward through the oracle (flash-bwd kernel is a
+    # TPU-side optimization; semantics identical).
+    def f(q_, k_, v_):
+        return ref.flash_attention_ref(
+            q_, k_, v_, causal=causal, window=window, q_offset=q_offset
+        ).astype(q_.dtype)
+
+    _, vjp = jax.vjp(f, q, k, v)
+    return vjp(g)
+
+
+attention.defvjp(_attention_fwd, _attention_bwd)

@@ -1,0 +1,2 @@
+"""Launcher layer: production mesh, logical-axis sharding rules, dry-run,
+train and serve entry points."""

@@ -1,0 +1,49 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a function (not a module-level constant) so
+importing this module never touches jax device state. The dry-run entry
+point sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before
+any jax import so 512 placeholder CPU devices exist; tests and benchmarks
+see the real single device.
+
+Topology: 16x16 = 256 chips per pod (v5e pod slice); multi-pod prepends a
+``pod`` axis (2 pods = 512 chips). ``pod`` is hierarchical data parallelism
+(DCN-connected), ``data`` is in-pod data parallelism, ``model`` is tensor /
+expert parallelism on the fastest ICI dimension.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — the "
+            "dry-run entry point must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "importing jax"
+        )
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_host_mesh(
+    shape: Optional[Sequence[int]] = None,
+    axes: Sequence[str] = ("data", "model"),
+) -> Mesh:
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    if shape is None:
+        shape = (n, 1)
+    return jax.make_mesh(tuple(shape), tuple(axes))

@@ -1,0 +1,40 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Recompute the `corrected` block of every single-pod dry-run artifact
+with the unrolled-sub-compile methodology (full compiles stay valid)."""
+import glob
+import json
+import sys
+import traceback
+
+from repro.launch.dryrun import corrected_costs
+from repro.launch.mesh import make_production_mesh
+from repro.configs.registry import SHAPES
+
+
+def main():
+    mesh = make_production_mesh()
+    paths = sorted(glob.glob("artifacts/dryrun/*__pod16x16.json"))
+    for p in paths:
+        with open(p) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        try:
+            cor = corrected_costs(rec["arch"], SHAPES[rec["shape"]], mesh, rec)
+            rec["corrected"] = cor
+            with open(p, "w") as f:
+                json.dump(rec, f, indent=1)
+            print(f"[refresh] {rec['arch']} {rec['shape']}: "
+                  f"flops={cor['flops']:.3e} bytes={cor['bytes']:.3e} "
+                  f"coll={cor['collective_bytes']:.3e}", flush=True)
+        except Exception as e:
+            print(f"[refresh] {rec['arch']} {rec['shape']}: FAIL "
+                  f"{type(e).__name__}: {str(e)[:200]}", flush=True)
+            traceback.print_exc()
+    print("[refresh] done", flush=True)
+
+
+if __name__ == "__main__":
+    main()

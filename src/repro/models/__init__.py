@@ -1,0 +1,9 @@
+"""Composable model definitions (pure-JAX, param-dict style).
+
+Every architecture in the assigned pool is expressed as a ``ModelConfig``
+whose ``block_pattern`` composes mixer (attention / SSM) and feed-forward
+(dense MLP / MoE / SparseLinear) choices per layer-period position. One
+``transformer.py`` forward serves dense, MoE, SSM, hybrid, audio-encoder and
+VLM archs.
+"""
+from repro.models.config import ModelConfig

@@ -1,0 +1,234 @@
+"""GQA/MQA attention with RoPE, sliding windows, KV cache, and two
+execution plans:
+
+* ``dense``   — full [Sq, Skv] score materialization. Used for train_4k
+  (fits VMEM/HBM comfortably per layer under scan+remat) and gives exact
+  HLO cost accounting in the dry-run.
+* ``blocked`` — lax.scan over query blocks (each block attends to the full
+  KV). O(bq * Skv) live memory; required for 32k prefill. The Pallas
+  flash-attention kernel (kernels/flash_attention.py) is the TPU hot-spot
+  twin selected via ``kernel_backend="pallas"``.
+
+Decode attends one new token against the cache with a dense [1, Skv] score
+row — no scan, exact cost accounting, and the KV-sequence axis may be
+sharded (``kv_seq`` logical axis): XLA turns the softmax reductions into the
+flash-decoding LSE combine across shards.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+from repro.launch.sharding import shard
+from repro.models.config import ModelConfig
+from repro.models.nn import Param, dense, dense_t
+
+__all__ = ["attn_t", "attn_forward", "attn_decode", "init_kv_cache", "rope"]
+
+_NEG_INF = -1e30
+
+
+def attn_t(cfg: ModelConfig) -> Dict:
+    hd = cfg.head_dim
+    return {
+        "wq": dense_t(cfg.d_model, (cfg.n_heads, hd),
+                      ("embed", "heads", "head_dim"), bias=cfg.attn_bias),
+        "wk": dense_t(cfg.d_model, (cfg.n_kv_heads, hd),
+                      ("embed", "kv_heads", "head_dim"), bias=cfg.attn_bias),
+        "wv": dense_t(cfg.d_model, (cfg.n_kv_heads, hd),
+                      ("embed", "kv_heads", "head_dim"), bias=cfg.attn_bias),
+        "wo": {"w": Param((cfg.n_heads, hd, cfg.d_model),
+                          ("heads", "head_dim", "embed"))},
+    }
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding over the last axis. x: [B, S, H, D], positions [B, S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # [B, S, half]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half : 2 * half]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    if d % 2:  # odd head_dim (hubert's 80 is even; safety)
+        rot = jnp.concatenate([rot, x[..., 2 * half :]], axis=-1)
+    return rot.astype(x.dtype)
+
+
+def _mask(
+    q_pos: jax.Array,  # [Sq] absolute positions of queries
+    k_pos: jax.Array,  # [Skv]
+    causal: bool,
+    window: Optional[int],
+) -> jax.Array:
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    return m
+
+
+def _gqa_scores_apply(
+    q: jax.Array,  # [B, Sq, KV, R, hd]
+    k: jax.Array,  # [B, Skv, KV, hd]
+    v: jax.Array,  # [B, Skv, KV, hd]
+    mask: jax.Array,  # [Sq, Skv] bool
+    scale: float,
+) -> jax.Array:
+    # bf16 operands, f32 accumulation (native MXU contract); probabilities
+    # drop back to the compute dtype for the PV matmul so the only f32
+    # buffer is the score block.
+    s = jnp.einsum("bqkrd,bskd->bkrqs", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask[None, None, None], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.any(mask, axis=-1)[None, None, None, :, None], p, 0.0)
+    return jnp.einsum("bkrqs,bskd->bqkrd", p.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32)
+
+
+def _project_qkv(p: Dict, x: jax.Array, cfg: ModelConfig,
+                 positions: jax.Array):
+    q = dense(p["wq"], x)  # [B, S, H, hd]
+    k = dense(p["wk"], x)  # [B, S, KV, hd]
+    v = dense(p["wv"], x)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "heads", "head_dim")
+    k = shard(k, "batch", "seq", "kv_heads", "head_dim")
+    v = shard(v, "batch", "seq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def attn_forward(
+    p: Dict,
+    x: jax.Array,  # [B, S, D]
+    cfg: ModelConfig,
+    positions: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Full-sequence attention (train / prefill)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    kv, rep = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    hd = cfg.head_dim
+    scale = 1.0 / float(np.sqrt(hd))
+    qg = q.reshape(b, s, kv, rep, hd)
+
+    backend = kops.resolve_backend(cfg.kernel_backend)
+    if backend in ("pallas", "pallas_interpret") and s % 512 == 0:
+        # Flash kernel path: flatten (B, KV, R) into the BH grid axis.
+        qf = qg.transpose(0, 2, 3, 1, 4).reshape(b * kv * rep, s, hd)
+        kf = jnp.repeat(
+            k.transpose(0, 2, 1, 3), rep, axis=1
+        ).reshape(b * kv * rep, s, hd)
+        vf = jnp.repeat(
+            v.transpose(0, 2, 1, 3), rep, axis=1
+        ).reshape(b * kv * rep, s, hd)
+        of = kops.attention(qf, kf, vf, cfg.causal, cfg.window, 0,
+                            cfg.kernel_backend)
+        out = of.reshape(b, kv, rep, s, hd).transpose(0, 3, 1, 2, 4)
+    elif cfg.attn_impl == "blocked" and s > cfg.attn_block_q and \
+            s % cfg.attn_block_q == 0:
+        bq = cfg.attn_block_q
+        k_pos = positions[0]
+
+        @jax.checkpoint  # recompute the score block in bwd: the inner-scan
+        # residuals would otherwise stack n_q f32 score blocks
+        def body(_, qi):
+            q_blk, qpos_blk = qi  # [B, bq, KV, R, hd], [bq]
+            # seq_q shards the score block over the query-position dim for
+            # archs whose head count doesn't divide TP (llama4's 40H/16).
+            q_blk = shard(q_blk, "batch", "seq_q", "kv_heads", None, None)
+            m = _mask(qpos_blk, k_pos, cfg.causal, cfg.window)
+            o = _gqa_scores_apply(q_blk, k, v, m, scale)
+            o = shard(o, "batch", "seq_q", "kv_heads", None, None)
+            return None, o
+
+        q_blocks = qg.reshape(b, s // bq, bq, kv, rep, hd).transpose(1, 0, 2, 3, 4, 5)
+        pos_blocks = positions[0].reshape(s // bq, bq)
+        _, o_blocks = jax.lax.scan(body, None, (q_blocks, pos_blocks))
+        out = o_blocks.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, kv, rep, hd)
+    else:
+        m = _mask(positions[0], positions[0], cfg.causal, cfg.window)
+        out = _gqa_scores_apply(qg, k, v, m, scale)
+
+    out = out.reshape(b, s, cfg.n_heads, hd).astype(x.dtype)
+    out = shard(out, "batch", "seq", "heads", "head_dim")
+    y = jnp.einsum("bshd,hde->bse", out, p["wo"]["w"].astype(x.dtype))
+    return shard(y, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# KV cache / decode
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(
+    cfg: ModelConfig, batch: int, max_seq: int, n_attn_layers: int, dtype
+) -> Dict[str, jax.Array]:
+    """Cache stacked over attention-layer instances. For SWA archs the
+    cache is a ring buffer of ``window`` slots."""
+    s = min(max_seq, cfg.window) if cfg.window else max_seq
+    shape = (n_attn_layers, batch, s, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+
+
+def attn_decode(
+    p: Dict,
+    x: jax.Array,  # [B, 1, D]
+    cache_k: jax.Array,  # [B, S_cache, KV, hd]
+    cache_v: jax.Array,
+    pos: jax.Array,  # [] int32 — absolute position of the new token
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step vs the cache. Returns (y, new_k, new_v)."""
+    b = x.shape[0]
+    s_cache = cache_k.shape[1]
+    positions = jnp.broadcast_to(pos[None], (b, 1))
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+    # Ring-buffer slot for SWA caches; plain slot otherwise. The write is
+    # a one-hot masked select, NOT dynamic-update-slice: GSPMD handles a
+    # dynamic index on the sequence-sharded cache dim by all-gathering the
+    # whole cache (measured: +17 GiB/layer for the 32k decode cell); the
+    # masked write stays local to each sequence shard.
+    slot = pos % s_cache if cfg.window else pos
+    hit = (jnp.arange(s_cache) == slot)[None, :, None, None]
+    cache_k = jnp.where(hit, k_new.astype(cache_k.dtype), cache_k)
+    cache_v = jnp.where(hit, v_new.astype(cache_v.dtype), cache_v)
+    cache_k = shard(cache_k, "kv_batch", "kv_seq", "kv_heads", "head_dim")
+    cache_v = shard(cache_v, "kv_batch", "kv_seq", "kv_heads", "head_dim")
+
+    kv, rep = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    hd = cfg.head_dim
+    qg = q.reshape(b, 1, kv, rep, hd)
+    # Validity of cache slots: slot index positions vs current pos.
+    idx = jnp.arange(s_cache)
+    if cfg.window:
+        # Ring buffer: slot i holds absolute position p_i ≡ i (mod s_cache)
+        # with p_i <= pos; valid iff pos - p_i < window and p_i <= pos.
+        age = (slot - idx) % s_cache  # 0 = newest
+        valid = age < jnp.minimum(pos + 1, cfg.window)
+    else:
+        valid = idx <= pos
+    # bf16 operands + f32 accumulation: an explicit .astype(f32) on the
+    # cache makes XLA materialize a full f32 cache copy (+2.5 GiB at 32k).
+    s = jnp.einsum("bqkrd,bskd->bkrqs", qg, cache_k,
+                   preferred_element_type=jnp.float32) / np.sqrt(hd)
+    s = jnp.where(valid[None, None, None, None, :], s, _NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkrqs,bskd->bqkrd", pr.astype(cache_v.dtype), cache_v,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, cfg.n_heads, hd).astype(x.dtype)
+    y = jnp.einsum("bshd,hde->bse", out, p["wo"]["w"].astype(x.dtype))
+    return shard(y, "batch", None, "embed"), cache_k, cache_v

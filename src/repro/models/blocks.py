@@ -1,0 +1,82 @@
+"""Decoder/encoder blocks: pre-norm mixer (attention or SSD) + FF (MLP or
+MoE), composed per the config's ``block_pattern``."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attn_decode, attn_forward, attn_t
+from repro.models.config import BlockSpec, ModelConfig
+from repro.models.mlp import mlp_forward, mlp_t
+from repro.models.moe import moe_forward, moe_t
+from repro.models.nn import rmsnorm, rmsnorm_t
+from repro.models.ssm import ssm_decode, ssm_forward, ssm_t
+
+__all__ = ["block_t", "block_forward", "block_decode"]
+
+
+def block_t(cfg: ModelConfig, spec: BlockSpec) -> Dict:
+    t = {
+        "ln1": rmsnorm_t(cfg.d_model),
+        "mixer": attn_t(cfg) if spec.mixer == "attn" else ssm_t(cfg),
+    }
+    if spec.ff != "none":
+        t["ln2"] = rmsnorm_t(cfg.d_model)
+        t["ff"] = mlp_t(cfg) if spec.ff == "mlp" else moe_t(cfg)
+    return t
+
+
+def block_forward(
+    p: Dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    spec: BlockSpec,
+    positions: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (x, moe_aux_loss)."""
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if spec.mixer == "attn":
+        h = attn_forward(p["mixer"], h, cfg, positions)
+    else:
+        h = ssm_forward(p["mixer"], h, cfg)
+    x = x + h
+    if spec.ff == "none":
+        return x, jnp.zeros((), jnp.float32)
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if spec.ff == "mlp":
+        h = mlp_forward(p["ff"], h, cfg)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        h, aux = moe_forward(p["ff"], h, cfg)
+    return x + h, aux
+
+
+def block_decode(
+    p: Dict,
+    x: jax.Array,  # [B, 1, D]
+    cfg: ModelConfig,
+    spec: BlockSpec,
+    pos: jax.Array,
+    kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+    ssm_state: Optional[Tuple[jax.Array, jax.Array]] = None,
+):
+    """One decode step through one block. Returns (x, new_kv, new_ssm)."""
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    new_kv = new_ssm = None
+    if spec.mixer == "attn":
+        h, ck, cv = attn_decode(p["mixer"], h, kv[0], kv[1], pos, cfg)
+        new_kv = (ck, cv)
+    else:
+        h, st, conv = ssm_decode(p["mixer"], h, ssm_state[0], ssm_state[1], cfg)
+        new_ssm = (st, conv)
+    x = x + h
+    if spec.ff == "none":
+        return x, new_kv, new_ssm
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if spec.ff == "mlp":
+        h = mlp_forward(p["ff"], h, cfg)
+    else:
+        h, _ = moe_forward(p["ff"], h, cfg)
+    return x + h, new_kv, new_ssm

@@ -1,0 +1,69 @@
+"""Feed-forward blocks: (gated) MLP and the SparseLinear feature.
+
+``SparseLinear`` is where the paper's technique enters the LM stack
+(DESIGN.md Sec. 3): the down-projection weight carries a *block-sparse
+support mask* in BCSV layout. Training keeps masked-dense semantics (the
+mask is a constant pytree leaf; the matmul is dense with zeros — exact
+cost/memory parity with the TPU bsr_spmm path is reported by the roofline
+tooling); serving on TPU packs the nonzero blocks and dispatches
+``kernels.ops.sparse_dense_matmul``.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.sharding import shard
+from repro.models.config import ModelConfig
+from repro.models.nn import Param, dense, dense_t
+
+__all__ = ["mlp_t", "mlp_forward", "sparse_block_mask"]
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def mlp_t(cfg: ModelConfig) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    t: Dict = {}
+    if cfg.mlp_gated:
+        t["wg"] = dense_t(d, f, ("embed", "mlp"))
+        t["wu"] = dense_t(d, f, ("embed", "mlp"))
+    else:
+        t["wu"] = dense_t(d, f, ("embed", "mlp"), bias=cfg.attn_bias)
+    t["wd"] = dense_t(f, d, ("mlp", "embed"), bias=(not cfg.mlp_gated and cfg.attn_bias))
+    if cfg.sparse_ffn:
+        gm, gf = f // cfg.sparse_block, d // cfg.sparse_block
+        t["wd_mask"] = Param((gm, gf), (None, None), "ones")
+    return t
+
+
+def sparse_block_mask(
+    key: jax.Array, f: int, d: int, block: int, density: float
+) -> jax.Array:
+    """Random block support for SparseLinear (magnitude pruning stand-in)."""
+    gm, gf = f // block, d // block
+    u = jax.random.uniform(key, (gm, gf))
+    thresh = jnp.quantile(u, density)
+    m = (u <= thresh).astype(jnp.float32)
+    return jnp.maximum(m, jnp.zeros_like(m).at[0, :].set(1.0))  # no empty col panels
+
+
+def mlp_forward(p: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    act = _act(cfg.act)
+    if cfg.mlp_gated:
+        h = act(dense(p["wg"], x)) * dense(p["wu"], x)
+    else:
+        h = act(dense(p["wu"], x))
+    h = shard(h, "batch", "seq", "mlp")
+    wd = p["wd"]
+    if cfg.sparse_ffn and "wd_mask" in p:
+        blk = cfg.sparse_block
+        mask = jnp.repeat(jnp.repeat(p["wd_mask"], blk, 0), blk, 1)
+        wd = {**wd, "w": wd["w"] * mask.astype(wd["w"].dtype)}
+    y = dense(wd, h)
+    return shard(y, "batch", "seq", "embed")

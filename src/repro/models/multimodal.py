@@ -1,0 +1,32 @@
+"""Modality frontend stubs (the brief: ``[audio]``/``[vlm]`` entries specify
+the transformer backbone only; ``input_specs()`` provides precomputed
+frame/patch embeddings).
+
+* audio  (hubert):    [B, S, frontend_dim] conv-feature frames -> linear
+  projection to d_model (the CNN feature extractor itself is out of scope).
+* vision (paligemma): [B, num_patches, frontend_dim] SigLIP patch embeddings
+  -> linear projection, prepended to the text-token embeddings.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.nn import dense, dense_t
+
+__all__ = ["frontend_t", "apply_frontend"]
+
+
+def frontend_t(cfg: ModelConfig) -> Dict:
+    if cfg.frontend == "none":
+        return {}
+    return {"proj": dense_t(cfg.frontend_dim, cfg.d_model,
+                            (None, "embed"), bias=True)}
+
+
+def apply_frontend(p: Dict, feats: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """feats: [B, S_frames|N_patches, frontend_dim] -> [B, *, d_model]."""
+    return dense(p["proj"], feats.astype(cfg.compute_dtype()))

@@ -1,0 +1,135 @@
+"""Parameter-template NN primitives.
+
+Each module describes its parameters as a *template* tree of ``Param``
+leaves (shape + logical axes + initializer). ``init_params`` materializes a
+params pytree from a template; ``logical_axes`` extracts the matching tree
+of logical-axis tuples (consumed by launch/sharding.py). Templates keep the
+param tree and its sharding annotations structurally identical by
+construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.sharding import shard
+
+__all__ = [
+    "Param",
+    "init_params",
+    "logical_axes",
+    "dense_t",
+    "rmsnorm_t",
+    "embedding_t",
+    "rmsnorm",
+    "dense",
+    "embed_lookup",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones | normal:<std>
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes}")
+
+
+def _init_leaf(key: jax.Array, p: Param, dtype) -> jax.Array:
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, dtype)
+    if p.init.startswith("normal"):
+        std = float(p.init.split(":")[1]) if ":" in p.init else (
+            1.0 / np.sqrt(p.shape[0])
+        )
+        return (jax.random.normal(key, p.shape) * std).astype(dtype)
+    raise ValueError(f"unknown init {p.init}")
+
+
+def init_params(key: jax.Array, template: Any, dtype=jnp.float32) -> Any:
+    """Materialize a params pytree from a template tree of Param leaves."""
+    leaves, treedef = jax.tree.flatten(
+        template, is_leaf=lambda x: isinstance(x, Param)
+    )
+    keys = jax.random.split(key, len(leaves))
+    out = [_init_leaf(k, p, dtype) for k, p in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def logical_axes(template: Any) -> Any:
+    """Extract the tree of logical-axis tuples matching init_params."""
+    return jax.tree.map(
+        lambda p: p.axes, template, is_leaf=lambda x: isinstance(x, Param)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Templates
+# ---------------------------------------------------------------------------
+
+def dense_t(
+    d_in: int,
+    d_out: Tuple[int, ...] | int,
+    axes: Tuple[Optional[str], ...],
+    *,
+    bias: bool = False,
+    std: Optional[float] = None,
+) -> Dict[str, Param]:
+    out_dims = (d_out,) if isinstance(d_out, int) else tuple(d_out)
+    init = f"normal:{std}" if std is not None else "normal"
+    t = {"w": Param((d_in, *out_dims), axes, init)}
+    if bias:
+        t["b"] = Param(out_dims, axes[1:], "zeros")
+    return t
+
+
+def rmsnorm_t(d: int) -> Dict[str, Param]:
+    return {"scale": Param((d,), ("embed",), "ones")}
+
+
+def embedding_t(vocab: int, d: int) -> Dict[str, Param]:
+    return {"table": Param((vocab, d), ("vocab", "embed"), "normal:0.02")}
+
+
+# ---------------------------------------------------------------------------
+# Apply functions
+# ---------------------------------------------------------------------------
+
+def rmsnorm(p: Dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm with f32 statistics but no full-tensor f32 copy.
+
+    The square+convert fuses into the mean reduction; only the [..., 1]
+    statistics are f32. Converting the whole tensor (x.astype(f32) * ...)
+    makes XLA sink the convert into upstream saved buffers (observed: the
+    layer-scan residual save doubled to f32).
+    """
+    dt = x.dtype
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(dt)
+    return x * inv * p["scale"].astype(dt)
+
+
+def dense(p: Dict, x: jax.Array, dtype=None) -> jax.Array:
+    """x [..., d_in] @ w [d_in, *out] (+ b). Contracts the last axis."""
+    w = p["w"]
+    dt = dtype or x.dtype
+    y = jax.lax.dot_general(
+        x.astype(dt), w.astype(dt),
+        (((x.ndim - 1,), (0,)), ((), ())),
+    )
+    if "b" in p:
+        y = y + p["b"].astype(dt)
+    return y
+
+
+def embed_lookup(p: Dict, tokens: jax.Array, dtype) -> jax.Array:
+    return jnp.take(p["table"].astype(dtype), tokens, axis=0)

@@ -1,0 +1,206 @@
+"""Mamba-2 (SSD, state-space duality) mixer — chunked training form +
+O(1)-state decode.
+
+Two implementation notes (DESIGN.md Sec. 6):
+
+* **Cost accounting**: the chunked SSD form keeps every FLOPs-heavy
+  contraction *outside* the sequential scan — intra-chunk attention-like
+  matmuls and the inter-chunk output contraction are batched einsums over
+  the chunk axis; only the cheap elementwise state decay/accumulate runs
+  inside ``lax.scan``. HLO cost analysis therefore counts ~all SSD FLOPs
+  exactly once (no trip-count correction needed in the sequence dim).
+
+* **TP sharding**: the fused Mamba in_proj is split into per-output
+  projections (z / x / B / C / dt) so each output gets a clean logical
+  sharding — in particular dt and the head-indexed decay tensors shard over
+  ``heads``, which keeps the [B, nC, Q, Q, H] intra-chunk decay tensor
+  (the big SSD intermediate) distributed over the model axis.
+  Mathematically identical to the fused projection.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import shard
+from repro.models.config import ModelConfig
+from repro.models.nn import Param, dense, rmsnorm
+
+__all__ = ["ssm_t", "ssm_forward", "ssm_decode", "init_ssm_cache"]
+
+
+def ssm_t(cfg: ModelConfig) -> Dict:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    cw = cfg.ssm_conv_width
+    return {
+        "z_proj": {"w": Param((d, di), ("embed", "inner"))},
+        "x_proj": {"w": Param((d, di), ("embed", "inner"))},
+        "b_proj": {"w": Param((d, n), ("embed", "state"))},
+        "c_proj": {"w": Param((d, n), ("embed", "state"))},
+        "dt_proj": {"w": Param((d, h), ("embed", "heads"))},
+        "conv_x": Param((cw, di), (None, "inner"), "normal:0.2"),
+        "conv_b": Param((cw, n), (None, "state"), "normal:0.2"),
+        "conv_c": Param((cw, n), (None, "state"), "normal:0.2"),
+        "a_log": Param((h,), ("heads",), "zeros"),
+        "d_skip": Param((h,), ("heads",), "ones"),
+        "dt_bias": Param((h,), ("heads",), "zeros"),
+        "norm": {"scale": Param((di,), ("inner",), "ones")},
+        "out_proj": {"w": Param((di, d), ("inner", "embed"))},
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv via shifted adds. x: [B, S, C], w: [cw, C]."""
+    cw = w.shape[0]
+    out = x * w[-1]
+    for i in range(cw - 1):
+        shift = cw - 1 - i
+        out = out + jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]] * w[i]
+    return out
+
+
+def _post(p: Dict, y: jax.Array, z: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Gated RMSNorm + out projection (y, z: [..., d_inner])."""
+    g = rmsnorm(p["norm"], y, cfg.norm_eps) * jax.nn.silu(
+        z.astype(jnp.float32)
+    ).astype(y.dtype)
+    out = dense(p["out_proj"], g.astype(z.dtype))
+    return shard(out, "batch", "seq", "embed")
+
+
+def ssm_forward(p: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Full-sequence SSD. x: [B, S, D]; S % ssm_chunk == 0."""
+    b, s, _ = x.shape
+    di, n, h, pdim = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    q = min(cfg.ssm_chunk, s)
+    assert s % q == 0, f"seq {s} % chunk {q}"
+    nc = s // q
+
+    z = shard(dense(p["z_proj"], x), "batch", "seq", "inner")
+    xc = jax.nn.silu(_causal_conv(dense(p["x_proj"], x), p["conv_x"].astype(x.dtype)))
+    bmat = jax.nn.silu(_causal_conv(dense(p["b_proj"], x), p["conv_b"].astype(x.dtype)))
+    cmat = jax.nn.silu(_causal_conv(dense(p["c_proj"], x), p["conv_c"].astype(x.dtype)))
+    dt_raw = dense(p["dt_proj"], x)  # [B,S,H]
+
+    f32 = jnp.float32
+    dt = jax.nn.softplus(dt_raw.astype(f32) + p["dt_bias"].astype(f32))
+    dt = shard(dt, "batch", "seq", "heads")
+    a = -jnp.exp(p["a_log"].astype(f32))  # [H]
+    da = dt * a  # ≤ 0
+    xh = shard(xc.reshape(b, s, h, pdim), "batch", "seq", "heads", None)
+
+    # chunk — keep x in the compute dtype; only the small decay statistics
+    # ([*, Q, H] and smaller) live in f32. The big [B,nC,Q,Q,H] decay
+    # tensor materializes ONCE, in bf16 (the elementwise chain
+    # sub->clamp->exp->mul->convert fuses into its producer), feeding the
+    # MXU with f32 accumulation.
+    dt_c = x.dtype
+    xhc = xh.reshape(b, nc, q, h, pdim)
+    dtc = dt.reshape(b, nc, q, h)
+    dac = da.reshape(b, nc, q, h)
+    bc = bmat.reshape(b, nc, q, n)
+    cc = cmat.reshape(b, nc, q, n)
+
+    acum = jnp.cumsum(dac, axis=2)  # [B,nC,Q,H] f32
+    # --- intra-chunk (quadratic-in-Q attention-like form) ----------------
+    seg = acum[:, :, :, None, :] - acum[:, :, None, :, :]  # [B,nC,Qi,Qj,H]
+    causal = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    # Clamp BEFORE exp: masked (j > i) entries have positive seg, and
+    # exp(+big)=inf leaks NaN through the where in the backward pass.
+    seg = jnp.where(causal, seg, 0.0)
+    l_mat = (jnp.where(causal, jnp.exp(seg), 0.0)
+             * dtc[:, :, None, :, :]).astype(dt_c)  # decay(i<-j) * dt_j
+    l_mat = shard(l_mat, "batch", None, None, None, "heads")
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc,
+                    preferred_element_type=jnp.float32)  # [B,nC,Q,Q]
+    scores = cb[..., None].astype(dt_c) * l_mat  # [B,nC,Qi,Qj,H] bf16
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xhc,
+                         preferred_element_type=jnp.float32)
+
+    # --- chunk-local end states ------------------------------------------
+    a_last = acum[:, :, -1:, :]  # [B,nC,1,H]
+    decay_to_end = (jnp.exp(a_last - acum) * dtc).astype(dt_c)  # [B,nC,Q,H]
+    s_loc = jnp.einsum("bcjh,bcjn,bcjhp->bchnp", decay_to_end, bc, xhc,
+                       preferred_element_type=jnp.float32)
+
+    # --- inter-chunk state propagation (cheap scan) -----------------------
+    a_sum = acum[:, :, -1, :]  # [B,nC,H]
+
+    def step(carry, inp):
+        s_local, decay = inp  # [B,H,N,P], [B,H]
+        h_in = carry
+        carry = s_local + decay[:, :, None, None] * carry
+        return carry, h_in
+
+    _, h_in = jax.lax.scan(
+        step,
+        jnp.zeros((b, h, n, pdim), f32),
+        (s_loc.transpose(1, 0, 2, 3, 4), jnp.exp(a_sum).transpose(1, 0, 2)),
+    )
+    h_in = h_in.transpose(1, 0, 2, 3, 4)  # [B,nC,H,N,P]
+
+    # --- inter-chunk output (batched, outside the scan) --------------------
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp", cc,
+                         jnp.exp(acum).astype(dt_c), h_in,
+                         preferred_element_type=jnp.float32)
+
+    y = (y_intra + y_inter).reshape(b, s, h, pdim)
+    y = y + p["d_skip"].astype(f32)[None, None, :, None] * xh.astype(f32)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    return _post(p, y, z, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_ssm_cache(
+    cfg: ModelConfig, batch: int, n_ssm_layers: int, dtype
+) -> Dict[str, jax.Array]:
+    di, n, h, pdim = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    cw = cfg.ssm_conv_width
+    return {
+        "state": jnp.zeros((n_ssm_layers, batch, h, n, pdim), jnp.float32),
+        "conv": jnp.zeros((n_ssm_layers, batch, cw - 1, di + 2 * n), dtype),
+    }
+
+
+def ssm_decode(
+    p: Dict,
+    x: jax.Array,  # [B, 1, D]
+    state: jax.Array,  # [B, H, N, P] f32
+    conv: jax.Array,  # [B, cw-1, di+2N]
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    b = x.shape[0]
+    di, n, h, pdim = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z = dense(p["z_proj"], x)
+    xbc_new = jnp.concatenate(
+        [dense(p["x_proj"], x), dense(p["b_proj"], x), dense(p["c_proj"], x)],
+        axis=-1,
+    )  # [B,1,di+2N]
+    window = jnp.concatenate([conv, xbc_new], axis=1)  # [B,cw,di+2N]
+    conv_w = jnp.concatenate(
+        [p["conv_x"], p["conv_b"], p["conv_c"]], axis=1
+    ).astype(window.dtype)
+    xbc = jax.nn.silu(jnp.einsum("bsc,sc->bc", window, conv_w))[:, None, :]
+    conv_next = window[:, 1:]
+    xc, bmat, cmat = xbc[..., :di], xbc[..., di : di + n], xbc[..., di + n :]
+
+    f32 = jnp.float32
+    dt_raw = dense(p["dt_proj"], x)[:, 0]
+    dt = jax.nn.softplus(dt_raw.astype(f32) + p["dt_bias"].astype(f32))  # [B,H]
+    a = -jnp.exp(p["a_log"].astype(f32))
+    decay = jnp.exp(dt * a)  # [B,H]
+    xh = xc.reshape(b, h, pdim).astype(f32)
+    bv = bmat[:, 0].astype(f32)  # [B,N]
+    cv = cmat[:, 0].astype(f32)
+    state = decay[:, :, None, None] * state + (
+        dt[:, :, None, None] * bv[:, None, :, None] * xh[:, :, None, :]
+    )
+    y = jnp.einsum("bn,bhnp->bhp", cv, state)
+    y = y + p["d_skip"].astype(f32)[None, :, None] * xh
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    return _post(p, y, z, cfg), state, conv_next

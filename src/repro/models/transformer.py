@@ -1,0 +1,333 @@
+"""The LM assembly: embedding/frontend -> scan over layer periods ->
+norm -> head. One forward serves all 10 assigned architectures.
+
+Execution structure (matters for the dry-run cost accounting, DESIGN.md
+Sec. 6):
+
+* **train/prefill forward**: ``lax.scan`` over the ``n_periods`` stacked
+  layer groups (bounded HLO size; the dry-run applies the L=1/L=2
+  trip-count correction). Remat policy wraps the scan body.
+* **decode**: fully *unrolled* over layers — decode ops are small, the HLO
+  stays modest, and cost analysis needs no correction.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import shard
+from repro.models.attention import init_kv_cache
+from repro.models.blocks import block_decode, block_forward, block_t
+from repro.models.config import ModelConfig
+from repro.models.multimodal import apply_frontend, frontend_t
+from repro.models.nn import (
+    dense,
+    dense_t,
+    embed_lookup,
+    embedding_t,
+    init_params,
+    logical_axes,
+    rmsnorm,
+    rmsnorm_t,
+)
+from repro.models.ssm import init_ssm_cache
+
+__all__ = [
+    "lm_template",
+    "init_lm",
+    "lm_axes",
+    "forward",
+    "decode_step",
+    "init_cache",
+    "lm_loss",
+]
+
+
+def _stack_template(t, n: int):
+    """Prepend a layer-period axis to every Param in a block template."""
+    from repro.models.nn import Param
+
+    return jax.tree.map(
+        lambda p: Param((n, *p.shape), (None, *p.axes), p.init),
+        t,
+        is_leaf=lambda x: isinstance(x, Param),
+    )
+
+
+def lm_template(cfg: ModelConfig) -> Dict:
+    t: Dict = {
+        "embed": embedding_t(cfg.vocab_padded, cfg.d_model),
+        "layers": [
+            _stack_template(block_t(cfg, spec), cfg.n_periods)
+            for spec in cfg.block_pattern
+        ],
+        "final_norm": rmsnorm_t(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        t["lm_head"] = dense_t(cfg.d_model, cfg.vocab_padded,
+                               ("embed", "vocab"))
+    fe = frontend_t(cfg)
+    if fe:
+        t["frontend"] = fe
+    return t
+
+
+def init_lm(key: jax.Array, cfg: ModelConfig) -> Dict:
+    return init_params(key, lm_template(cfg), dtype=cfg.params_dtype())
+
+
+def lm_axes(cfg: ModelConfig) -> Dict:
+    return logical_axes(lm_template(cfg))
+
+
+def _embed_inputs(
+    params: Dict,
+    cfg: ModelConfig,
+    tokens: Optional[jax.Array],
+    feats: Optional[jax.Array],
+) -> jax.Array:
+    dt = cfg.compute_dtype()
+    if cfg.frontend == "audio":
+        h = apply_frontend(params["frontend"], feats, cfg)
+    elif cfg.frontend == "vision":
+        img = apply_frontend(params["frontend"], feats, cfg)
+        txt = embed_lookup(params["embed"], tokens, dt)
+        h = jnp.concatenate([img, txt], axis=1)
+    else:
+        h = embed_lookup(params["embed"], tokens, dt)
+    return shard(h, "batch", "seq", "embed")
+
+
+def _head(params: Dict, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum(
+            "bsd,vd->bsv", h, params["embed"]["table"].astype(h.dtype)
+        )
+    else:
+        logits = dense(params["lm_head"], h)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    if cfg.vocab_padded != cfg.vocab:
+        # Mask the padded vocabulary tail (never sampled, never trained up).
+        pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+        logits = jnp.where(pad_mask, -1e30, logits.astype(jnp.float32)).astype(
+            logits.dtype
+        )
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def forward(
+    params: Dict,
+    cfg: ModelConfig,
+    tokens: Optional[jax.Array] = None,
+    feats: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward. Returns (logits [B,S,V], moe_aux scalar)."""
+    h = _embed_inputs(params, cfg, tokens, feats)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def period_body(carry, period_params):
+        x, aux = carry
+        for pos_idx, spec in enumerate(cfg.block_pattern):
+            x, a = block_forward(
+                period_params[pos_idx], x, cfg, spec, positions
+            )
+            aux = aux + a
+        # The scan carry is the activation tensor remat keeps alive per
+        # layer; pin it to the sequence-parallel layout (1/TP bytes) and
+        # fence it so XLA cannot hoist the next layer's f32 upcast across
+        # the save (observed: the stacked residual buffer became f32 —
+        # 2x the bytes — without the barrier).
+        x = shard(x, "batch", "seq_resid", "embed")
+        x = jax.lax.optimization_barrier(x)
+        return (x, aux), None
+
+    if cfg.remat == "full":
+        period_body = jax.checkpoint(period_body)
+    elif cfg.remat == "dots":
+        period_body = jax.checkpoint(
+            period_body,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+        )
+
+    (h, aux), _ = jax.lax.scan(
+        period_body, (h, jnp.zeros((), jnp.float32)), params["layers"],
+        unroll=cfg.n_periods if cfg.scan_unroll else 1,
+    )
+    return _head(params, h, cfg), aux
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def _attn_positions(cfg: ModelConfig):
+    return [i for i in range(cfg.n_layers)
+            if cfg.block_pattern[i % cfg.period].mixer == "attn"]
+
+
+def _ssm_positions(cfg: ModelConfig):
+    return [i for i in range(cfg.n_layers)
+            if cfg.block_pattern[i % cfg.period].mixer == "ssm"]
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict:
+    """Decode cache for all layers (KV ring buffers + SSM states)."""
+    dt = cfg.compute_dtype()
+    cache: Dict = {"pos": jnp.zeros((), jnp.int32)}
+    n_attn = len(_attn_positions(cfg))
+    if n_attn:
+        cache["kv"] = init_kv_cache(cfg, batch, max_seq, n_attn, dt)
+    n_ssm = len(_ssm_positions(cfg))
+    if n_ssm:
+        cache["ssm"] = init_ssm_cache(cfg, batch, n_ssm, dt)
+    return cache
+
+
+def decode_step(
+    params: Dict,
+    cache: Dict,
+    cfg: ModelConfig,
+    token: jax.Array,  # [B, 1] int32
+) -> Tuple[jax.Array, Dict]:
+    """One token of autoregressive decode. Returns (logits [B,1,V], cache).
+
+    Scans over layer periods (like the forward pass): an unrolled decode
+    let the scheduler keep per-layer buffers concurrently live. Cache
+    slices ride the scan as xs/ys; the dry-run applies the same L=1/L=2
+    cost correction as training.
+    """
+    dt = cfg.compute_dtype()
+    h = embed_lookup(params["embed"], token, dt)
+    h = shard(h, "batch", None, "embed")
+    pos = cache["pos"]
+    cache = dict(cache)
+    n_p = cfg.n_periods
+    attn_pp = sum(1 for b in cfg.block_pattern if b.mixer == "attn")
+    ssm_pp = sum(1 for b in cfg.block_pattern if b.mixer == "ssm")
+    # fori_loop (not scan): the cache rides the carry and is updated with
+    # dynamic-index .at[].set on the (unsharded) layer dim, which XLA
+    # bufferizes in place — scan xs/ys would double-buffer the multi-GiB
+    # KV cache twice over.
+    carry = {
+        "h": h,
+        "k": cache.get("kv", {}).get("k"),
+        "v": cache.get("kv", {}).get("v"),
+        "state": cache.get("ssm", {}).get("state"),
+        "conv": cache.get("ssm", {}).get("conv"),
+    }
+    carry = {k: v for k, v in carry.items() if v is not None}
+
+    def period_body(i, c):
+        ai = i * attn_pp
+        si = i * ssm_pp
+        h = c["h"]
+        for pos_idx, spec in enumerate(cfg.block_pattern):
+            p_li = jax.tree.map(lambda a: a[i], params["layers"][pos_idx])
+            if spec.mixer == "attn":
+                kv = (c["k"][ai], c["v"][ai])
+                h, new_kv, _ = block_decode(p_li, h, cfg, spec, pos, kv=kv)
+                c = dict(c)
+                c["k"] = c["k"].at[ai].set(new_kv[0])
+                c["v"] = c["v"].at[ai].set(new_kv[1])
+                ai += 1
+            else:
+                st = (c["state"][si], c["conv"][si])
+                h, _, new_ssm = block_decode(p_li, h, cfg, spec, pos,
+                                             ssm_state=st)
+                c = dict(c)
+                c["state"] = c["state"].at[si].set(new_ssm[0])
+                c["conv"] = c["conv"].at[si].set(new_ssm[1])
+                si += 1
+        c["h"] = h
+        return c
+
+    if cfg.scan_unroll:  # exact cost accounting for the dry-run sub-compiles
+        for i in range(n_p):
+            carry = period_body(i, carry)
+    else:
+        carry = jax.lax.fori_loop(0, n_p, period_body, carry)
+    if attn_pp:
+        cache["kv"] = {"k": carry["k"], "v": carry["v"]}
+    if ssm_pp:
+        cache["ssm"] = {"state": carry["state"], "conv": carry["conv"]}
+    logits = _head(params, carry["h"], cfg)
+    cache["pos"] = pos + 1
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def _token_nll(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Per-token -log p(label). Custom VJP keeps every [T, V] tensor in the
+    compute dtype: at vocab 256k x 64k tokens/device the default autodiff
+    path materializes several f32 [T, V] buffers (exp, dlogits, transposes)
+    — ~4 GiB each — that dominate HBM."""
+    lse = jax.scipy.special.logsumexp(logits.astype(jnp.float32), axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return lse - picked.astype(jnp.float32)
+
+
+def _token_nll_fwd(logits, labels):
+    lse = jax.scipy.special.logsumexp(logits.astype(jnp.float32), axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return lse - picked.astype(jnp.float32), (logits, labels, lse)
+
+
+def _token_nll_bwd(res, g):
+    logits, labels, lse = res
+    # softmax in the compute dtype (exp of a ≤0 number: safe in bf16).
+    p = jnp.exp(logits.astype(jnp.float32) - lse[..., None]).astype(logits.dtype)
+    dl = p * g[..., None].astype(logits.dtype)
+    onehot_g = jnp.zeros_like(dl).at[
+        jnp.arange(dl.shape[0])[:, None], labels[..., None]
+    ].add(g[..., None].astype(logits.dtype)) if dl.ndim == 2 else None
+    if dl.ndim == 3:  # [B, S, V]
+        b_idx = jnp.arange(dl.shape[0])[:, None, None]
+        s_idx = jnp.arange(dl.shape[1])[None, :, None]
+        dl = dl.at[b_idx, s_idx, labels[..., None]].add(
+            -g[..., None].astype(dl.dtype)
+        )
+    else:
+        dl = dl - onehot_g
+    return dl, None
+
+
+_token_nll.defvjp(_token_nll_fwd, _token_nll_bwd)
+
+
+def lm_loss(
+    params: Dict,
+    cfg: ModelConfig,
+    tokens: Optional[jax.Array] = None,
+    labels: Optional[jax.Array] = None,
+    feats: Optional[jax.Array] = None,
+    mask: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict]:
+    """Cross-entropy LM loss.
+
+    Decoder LMs: ``labels`` are next tokens (pre-shifted by the pipeline).
+    Encoder (hubert): ``labels`` are per-frame targets, ``mask`` selects the
+    masked-prediction positions.
+    """
+    logits, aux = forward(params, cfg, tokens=tokens, feats=feats)
+    if cfg.frontend == "vision":
+        # Loss on the text region only.
+        logits = logits[:, cfg.num_patches :]
+    # Fused CE with a compute-dtype custom VJP (see _token_nll).
+    nll = _token_nll(logits, labels)
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = loss + cfg.router_aux_weight * aux
+    return total, {"loss": loss, "moe_aux": aux}

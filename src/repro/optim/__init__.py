@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamW
+from repro.optim.schedules import constant, warmup_cosine
+from repro.optim.clip import clip_by_global_norm

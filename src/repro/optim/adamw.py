@@ -1,0 +1,77 @@
+"""AdamW with optional bf16 compute params + f32 master weights.
+
+Pure-functional: ``init(params) -> state``; ``update(grads, state, params,
+step) -> (new_params, new_state)``. With ``master=True`` the training params
+may be bf16 (what the forward consumes, and what the gradient all-reduce
+moves — half the DP collective bytes); the f32 master copy lives in the
+optimizer state and is the ZeRO-1-sharded tensor.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamW"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    master: bool = False  # keep f32 master copy (params may be bf16)
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+    def init(self, params: Any) -> Dict:
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        state = {
+            "m": zeros,
+            "v": jax.tree.map(jnp.zeros_like, zeros),
+            "step": jnp.zeros((), jnp.int32),
+        }
+        if self.master:
+            state["master"] = jax.tree.map(
+                lambda p: p.astype(jnp.float32), params
+            )
+        return state
+
+    def update(
+        self, grads: Any, state: Dict, params: Any
+    ) -> Tuple[Any, Dict]:
+        step = state["step"] + 1
+        lr = self._lr(step)
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+        ref = state["master"] if self.master else params
+
+        def upd(g, m, v, p):
+            # No standalone f32 cast of g: the converts fuse into the m/v
+            # elementwise updates (which are f32-typed via m/v), so no
+            # param-sized f32 gradient buffer materializes.
+            m = b1 * m + (1 - b1) * g.astype(jnp.float32)
+            v = b2 * v + (1 - b2) * (g * g).astype(jnp.float32)
+            upd_ = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            p32 = p.astype(jnp.float32)
+            p32 = p32 - lr * (upd_ + self.weight_decay * p32)
+            return m, v, p32
+
+        fused = jax.tree.map(upd, grads, state["m"], state["v"], ref)
+        is_tup = lambda x: isinstance(x, tuple)  # noqa: E731
+        m = jax.tree.map(lambda t: t[0], fused, is_leaf=is_tup)
+        v = jax.tree.map(lambda t: t[1], fused, is_leaf=is_tup)
+        new_master = jax.tree.map(lambda t: t[2], fused, is_leaf=is_tup)
+        new_state = {"m": m, "v": v, "step": step}
+        if self.master:
+            new_state["master"] = new_master
+        new_params = jax.tree.map(
+            lambda nm, p: nm.astype(p.dtype), new_master, params
+        )
+        return new_params, new_state

@@ -1,0 +1,26 @@
+"""Global-norm gradient clipping."""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["clip_by_global_norm", "global_norm"]
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    # Scale in each leaf's own dtype: an f32 `x * scale` would promote the
+    # whole (param-sized) tree to f32 — XLA then sinks the convert into the
+    # gradient buffers, doubling their bytes.
+    return jax.tree.map(
+        lambda x: x * scale.astype(x.dtype), tree), norm

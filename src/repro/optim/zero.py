@@ -1,0 +1,62 @@
+"""ZeRO-1 optimizer-state sharding.
+
+Parameters are TP-sharded over ``model`` and replicated over the data axes;
+the optimizer moments (and f32 master copy) additionally shard over the
+data axes — each DP rank owns 1/DP of every state tensor. With GSPMD this
+is one sharding-constraint table: ``zero1_specs`` extends each parameter's
+PartitionSpec by placing the data axes on the first dimension the spec
+leaves unsharded (preferring the largest dim for even splits).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+__all__ = ["zero1_specs", "opt_state_specs"]
+
+
+def _extend(spec: P, shape, data_axes, mesh: Mesh) -> P:
+    axes = list(spec) + [None] * (len(shape) - len(spec))
+    used = {a for ax in axes for a in ((ax,) if isinstance(ax, str) else (ax or ()))}
+    if any(a in used for a in data_axes):
+        return P(*axes)  # already data-sharded (e.g. FSDP params)
+    dp = 1
+    for a in data_axes:
+        dp *= mesh.shape[a]
+    # Choose the largest unsharded dim divisible by the DP degree; fall back
+    # to the largest unsharded dim (GSPMD pads uneven shards).
+    # Only evenly-divisible dims: these specs feed jit in_shardings, which
+    # (unlike with_sharding_constraint) demand exact divisibility.
+    div = [i for i, ax in enumerate(axes)
+           if ax is None and shape[i] > 1 and shape[i] % dp == 0]
+    if not div:
+        return P(*axes)
+    pick = max(div, key=lambda i: shape[i])
+    axes[pick] = data_axes if len(data_axes) > 1 else data_axes[0]
+    return P(*axes)
+
+
+def zero1_specs(param_specs: Any, param_shapes: Any, mesh: Mesh) -> Any:
+    """Per-leaf PartitionSpecs for one optimizer-state copy of the params."""
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if not data_axes:
+        return param_specs
+    return jax.tree.map(
+        lambda s, sh: _extend(s, sh.shape, data_axes, mesh),
+        param_specs,
+        param_shapes,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def opt_state_specs(
+    param_specs: Any, param_shapes: Any, mesh: Mesh, master: bool
+) -> Dict:
+    """Specs for the AdamW state dict {m, v, step[, master]}."""
+    z = zero1_specs(param_specs, param_shapes, mesh)
+    out = {"m": z, "v": z, "step": P()}
+    if master:
+        out["master"] = z
+    return out

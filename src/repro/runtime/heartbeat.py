@@ -1,0 +1,65 @@
+"""Liveness heartbeats.
+
+Each worker process touches ``<dir>/heartbeat_<host>.json`` every
+``interval`` seconds from a daemon thread; an external supervisor (or the
+coordinator) declares a worker dead after ``timeout`` without a beat and
+triggers restart-from-checkpoint. ``check_peers`` implements the
+supervisor-side scan."""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Dict, List
+
+__all__ = ["Heartbeat", "check_peers"]
+
+
+class Heartbeat:
+    def __init__(self, directory: str, host: str = "host0", interval: float = 5.0):
+        self.path = os.path.join(directory, f"heartbeat_{host}.json")
+        self.interval = interval
+        self.host = host
+        os.makedirs(directory, exist_ok=True)
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self.step = 0
+
+    def beat(self) -> None:
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"host": self.host, "time": time.time(),
+                       "step": self.step}, f)
+        os.replace(tmp, self.path)
+
+    def start(self) -> None:
+        def run():
+            while not self._stop.wait(self.interval):
+                self.beat()
+
+        self.beat()
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread:
+            self._thread.join()
+
+
+def check_peers(directory: str, timeout: float) -> Dict[str, List[str]]:
+    """Supervisor scan: classify workers as alive/dead by beat age."""
+    now = time.time()
+    alive, dead = [], []
+    if os.path.isdir(directory):
+        for name in os.listdir(directory):
+            if not name.startswith("heartbeat_") or name.endswith(".tmp"):
+                continue
+            try:
+                with open(os.path.join(directory, name)) as f:
+                    rec = json.load(f)
+            except (json.JSONDecodeError, OSError):
+                continue
+            (alive if now - rec["time"] <= timeout else dead).append(rec["host"])
+    return {"alive": sorted(alive), "dead": sorted(dead)}

@@ -1,0 +1,165 @@
+"""pjit-able train / prefill / decode step builders.
+
+The returned functions are pure (params/state in, params/state out) and are
+annotated internally with logical-axis sharding constraints; the launcher
+decides in/out shardings and wraps them in ``jax.jit`` under an active
+``use_rules`` context.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tr
+from repro.models.config import ModelConfig
+from repro.optim.adamw import AdamW
+from repro.optim.clip import clip_by_global_norm
+
+__all__ = [
+    "make_train_step",
+    "make_prefill_step",
+    "make_decode_step",
+    "cache_axes",
+    "batch_axes",
+]
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    optimizer: AdamW,
+    clip_norm: float = 1.0,
+    microbatches: int = 1,
+    grad_shardings: Optional[Any] = None,
+):
+    """Build the train step.
+
+    ``microbatches`` > 1 enables gradient accumulation: the global batch is
+    split along dim 0 and fwd+bwd runs once per microbatch (an *unrolled*
+    loop — exact HLO cost accounting, same live-memory behaviour as a scan
+    since buffers are reused sequentially). The f32 accumulator is pinned
+    to ``grad_shardings`` (the ZeRO-1 layout) so each shard holds 1/DP of
+    the gradient — XLA fuses the DP all-reduce into a reduce-scatter.
+    """
+    compute_dt = cfg.compute_dtype()
+
+    def loss_fn(p, ubatch):
+        pc = jax.tree.map(
+            lambda x: x.astype(compute_dt)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x,
+            p,
+        )
+        return tr.lm_loss(pc, cfg, **ubatch)
+
+    def train_step(params, opt_state, batch):
+        u = microbatches
+        if u == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            # Keep gradients in bf16 end-to-end: the DP reduction moves
+            # half the bytes and no full-size f32 gradient tensor ever
+            # exists — the optimizer upcasts per-element on ZeRO shards.
+            if grad_shardings is not None:
+                grads = jax.tree.map(
+                    jax.lax.with_sharding_constraint, grads, grad_shardings)
+        else:
+            # lax.scan over microbatches: true sequential execution — the
+            # scheduler cannot overlap two microbatch backwards (observed
+            # with an unrolled loop: u live gradient trees). The f32
+            # accumulator rides the carry in the ZeRO-sharded layout.
+            split = jax.tree.map(
+                lambda x: x.reshape(u, x.shape[0] // u, *x.shape[1:]), batch)
+
+            def ubatch_body(carry, ub):
+                acc, loss_acc, met_acc = carry
+                (li, mi), gi = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, ub)
+                # bf16 reduce-scatter, then accumulate in f32 on the shard.
+                if grad_shardings is not None:
+                    gi = jax.tree.map(
+                        jax.lax.with_sharding_constraint, gi, grad_shardings)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), acc, gi)
+                return (acc, loss_acc + li / u,
+                        jax.tree.map(lambda a, b: a + b / u, met_acc, mi)), None
+
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            if grad_shardings is not None:
+                acc0 = jax.tree.map(
+                    jax.lax.with_sharding_constraint, acc0, grad_shardings)
+            met0 = {"loss": jnp.zeros((), jnp.float32),
+                    "moe_aux": jnp.zeros((), jnp.float32)}
+            (grads, loss, metrics), _ = jax.lax.scan(
+                ubatch_body, (acc0, jnp.zeros((), jnp.float32), met0), split)
+            grads = jax.tree.map(lambda g: g / u, grads)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["total_loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """Forward over the full prompt; returns last-position logits."""
+
+    def prefill_step(params, batch):
+        logits, _ = tr.forward(
+            params, cfg,
+            tokens=batch.get("tokens"), feats=batch.get("feats"),
+        )
+        return logits[:, -1]
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, cache, token):
+        return tr.decode_step(params, cache, cfg, token)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Logical axes for the non-param trees (the launcher resolves via rules)
+# ---------------------------------------------------------------------------
+
+def cache_axes(cfg: ModelConfig) -> Dict:
+    """Logical axes tree matching tr.init_cache."""
+    out: Dict[str, Any] = {"pos": ()}
+    if any(b.mixer == "attn" for b in cfg.block_pattern):
+        kvax = (None, "kv_batch", "kv_seq", "kv_heads", "head_dim")
+        out["kv"] = {"k": kvax, "v": kvax}
+    if any(b.mixer == "ssm" for b in cfg.block_pattern):
+        out["ssm"] = {
+            "state": (None, "kv_batch", "heads", None, None),
+            "conv": (None, "kv_batch", None, None),
+        }
+    return out
+
+
+def batch_axes(cfg: ModelConfig, kind: str = "train") -> Dict:
+    """Logical axes for the data batch (matches data.batch_specs)."""
+    if cfg.frontend == "audio":
+        base = {"feats": ("batch", "seq", None)}
+        if kind == "train":
+            base["labels"] = ("batch", "seq")
+            base["mask"] = ("batch", "seq")
+        return base
+    if cfg.frontend == "vision":
+        base = {
+            "tokens": ("batch", "seq"),
+            "feats": ("batch", None, None),
+        }
+        if kind == "train":
+            base["labels"] = ("batch", "seq")
+        return base
+    base = {"tokens": ("batch", "seq")}
+    if kind == "train":
+        base["labels"] = ("batch", "seq")
+    return base

@@ -1,0 +1,29 @@
+"""Sparse matrix formats and utilities.
+
+Implements the paper's Compressed Sparse Vector (CSV) format (Sec. 3) plus
+the standard formats it is defined against (COO/CSR/CSC) and the TPU-native
+block variants (BCSR/BCSV) used by the Pallas kernels.
+"""
+from repro.sparse.formats import (
+    COO,
+    CSR,
+    CSC,
+    CSV,
+    BCSR,
+    BCSV,
+    SparseFormat,
+)
+from repro.sparse import convert, random, io
+
+__all__ = [
+    "COO",
+    "CSR",
+    "CSC",
+    "CSV",
+    "BCSR",
+    "BCSV",
+    "SparseFormat",
+    "convert",
+    "random",
+    "io",
+]

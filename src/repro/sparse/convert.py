@@ -1,0 +1,98 @@
+"""Format conversions (the paper's host pre-processing utilities, Sec. 4.3).
+
+The paper: "the utility functions read in the raw matrix files in an
+existing sparse matrix format then convert and store the matrices in the
+CSV format. The pre-processing step only needs to be performed once."
+"""
+from __future__ import annotations
+
+from typing import Tuple, Union
+
+import numpy as np
+
+from repro.sparse.formats import BCSR, BCSV, COO, CSC, CSR, CSV, SparseFormat
+
+AnySparse = Union[COO, CSR, CSC, CSV, BCSR, BCSV]
+
+
+def to_coo(a: Union[np.ndarray, AnySparse]) -> COO:
+    if isinstance(a, np.ndarray):
+        return COO.fromdense(a)
+    if isinstance(a, COO):
+        return a
+    if isinstance(a, (CSR, CSC, CSV)):
+        return a.to_coo()
+    if isinstance(a, (BCSR, BCSV)):
+        return COO.fromdense(a.todense())
+    raise TypeError(f"cannot convert {type(a)} to COO")
+
+
+def to_csr(a: Union[np.ndarray, AnySparse]) -> CSR:
+    if isinstance(a, CSR):
+        return a
+    return CSR.from_coo(to_coo(a).sum_duplicates())
+
+
+def to_csc(a: Union[np.ndarray, AnySparse]) -> CSC:
+    if isinstance(a, CSC):
+        return a
+    return _coo_to_csc(to_coo(a).sum_duplicates())
+
+
+def _coo_to_csc(coo: COO) -> CSC:
+    order = np.lexsort((coo.row, coo.col))
+    r, c, v = coo.row[order], coo.col[order], coo.val[order]
+    indptr = np.zeros(coo.shape[1] + 1, dtype=np.int64)
+    np.add.at(indptr, c.astype(np.int64) + 1, 1)
+    np.cumsum(indptr, out=indptr)
+    return CSC(indptr, r, v, coo.shape)
+
+
+def to_csv(a: Union[np.ndarray, AnySparse], num_pe: int) -> CSV:
+    """Convert to the paper's CSV format with ``num_pe`` rows per group."""
+    if isinstance(a, CSV) and a.num_pe == num_pe:
+        return a
+    return CSV.from_coo(to_coo(a).sum_duplicates(), num_pe)
+
+
+def to_bcsr(
+    a: Union[np.ndarray, AnySparse], block_shape: Tuple[int, int]
+) -> BCSR:
+    if isinstance(a, BCSR) and a.block_shape == tuple(block_shape):
+        return a
+    dense = a if isinstance(a, np.ndarray) else to_coo(a).sum_duplicates().todense()
+    dense = pad_to_blocks(dense, block_shape)
+    return BCSR.fromdense(dense, block_shape)
+
+
+def to_bcsv(
+    a: Union[np.ndarray, AnySparse], block_shape: Tuple[int, int], group: int
+) -> BCSV:
+    if (
+        isinstance(a, BCSV)
+        and a.block_shape == tuple(block_shape)
+        and a.group == group
+    ):
+        return a
+    dense = a if isinstance(a, np.ndarray) else to_coo(a).sum_duplicates().todense()
+    dense = pad_to_blocks(dense, block_shape)
+    return BCSV.fromdense(dense, block_shape, group)
+
+
+def pad_to_blocks(a: np.ndarray, block_shape: Tuple[int, int]) -> np.ndarray:
+    """Zero-pad a dense matrix so both dims divide the block shape."""
+    bm, bn = block_shape
+    m, n = a.shape
+    pm, pn = (-m) % bm, (-n) % bn
+    if pm == 0 and pn == 0:
+        return a
+    return np.pad(a, ((0, pm), (0, pn)))
+
+
+def csr_to_csv(a: CSR, num_pe: int) -> CSV:
+    """Direct CSR -> CSV conversion (the paper's primary preprocessing path)."""
+    return CSV.from_coo(a.to_coo(), num_pe)
+
+
+def csv_to_csr(a: CSV) -> CSR:
+    return CSR.from_coo(a.to_coo())

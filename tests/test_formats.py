@@ -1,0 +1,120 @@
+"""Sparse format unit + property tests (paper Sec. 2.1, 3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sparse.convert import (
+    csr_to_csv, csv_to_csr, pad_to_blocks, to_bcsr, to_bcsv, to_csc, to_csr,
+    to_csv,
+)
+from repro.sparse.formats import BCSR, BCSV, COO, CSC, CSR, CSV
+from repro.sparse.random import random_coo, suite_matrix, SUITE
+
+
+def _rand_dense(rng, m, n, density):
+    a = rng.standard_normal((m, n)).astype(np.float32)
+    a[rng.random((m, n)) >= density] = 0.0
+    return a
+
+
+class TestRoundTrips:
+    @pytest.mark.parametrize("density", [0.0, 0.05, 0.3, 1.0])
+    def test_coo_csr_csc_dense_roundtrip(self, density):
+        rng = np.random.default_rng(1)
+        a = _rand_dense(rng, 37, 23, density)
+        assert np.array_equal(COO.fromdense(a).todense(), a)
+        assert np.array_equal(CSR.fromdense(a).todense(), a)
+        assert np.array_equal(CSC.fromdense(a).todense(), a)
+
+    @pytest.mark.parametrize("num_pe", [1, 2, 7, 32])
+    def test_csv_roundtrip_and_order(self, num_pe):
+        rng = np.random.default_rng(2)
+        a = _rand_dense(rng, 40, 31, 0.2)
+        csv = CSV.fromdense(a, num_pe)
+        csv.validate()  # vector-major order invariant
+        assert np.array_equal(csv.todense(), a)
+
+    def test_csr_csv_csr(self):
+        a = suite_matrix("poisson3Da", scale=0.02)
+        csv = csr_to_csv(a, 8)
+        back = csv_to_csr(csv)
+        assert np.array_equal(back.todense(), a.todense())
+
+    @pytest.mark.parametrize("bs", [(4, 4), (8, 16)])
+    def test_block_formats_roundtrip(self, bs):
+        rng = np.random.default_rng(3)
+        a = _rand_dense(rng, 64, 48, 0.1)
+        assert np.array_equal(BCSR.fromdense(a, bs).todense(), a)
+        b = BCSV.fromdense(a, bs, group=2)
+        b.validate()
+        assert np.array_equal(b.todense(), a)
+
+
+class TestCSVProperties:
+    @settings(max_examples=60, deadline=None)
+    @given(
+        m=st.integers(1, 40),
+        n=st.integers(1, 40),
+        num_pe=st.integers(1, 9),
+        seed=st.integers(0, 10_000),
+    )
+    def test_csv_preserves_all_nonzeros(self, m, n, num_pe, seed):
+        rng = np.random.default_rng(seed)
+        a = _rand_dense(rng, m, n, 0.25)
+        csv = CSV.fromdense(a, num_pe)
+        csv.validate()
+        assert csv.nnz == np.count_nonzero(a)
+        assert np.array_equal(csv.todense(), a)
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        m=st.integers(1, 30),
+        num_pe=st.integers(1, 8),
+        seed=st.integers(0, 10_000),
+    )
+    def test_vector_ids_group_by_column_within_rowgroup(self, m, num_pe, seed):
+        rng = np.random.default_rng(seed)
+        a = _rand_dense(rng, m, m, 0.3)
+        csv = CSV.fromdense(a, num_pe)
+        vid = csv.vector_id()
+        if csv.nnz == 0:
+            return
+        # Within one vector id: same column and same row-group.
+        for v in np.unique(vid):
+            sel = vid == v
+            assert np.unique(csv.col_ind[sel]).size == 1
+            assert np.unique(csv.row_ind[sel] // num_pe).size == 1
+        # Ids are non-decreasing and dense.
+        assert np.all(np.diff(vid) >= 0)
+        assert vid.max() + 1 == csv.num_vectors()
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 1000), num_pe=st.integers(1, 6))
+    def test_csv_num_pe_1_is_row_major(self, seed, num_pe):
+        """num_pe=1 must coincide with CSR (row-major) ordering."""
+        rng = np.random.default_rng(seed)
+        a = _rand_dense(rng, 12, 12, 0.4)
+        csv = CSV.fromdense(a, 1)
+        csr = CSR.fromdense(a)
+        coo = csr.to_coo()
+        assert np.array_equal(csv.row_ind, coo.row)
+        assert np.array_equal(csv.col_ind, coo.col)
+        assert np.array_equal(csv.val, coo.val)
+
+
+class TestSyntheticSuite:
+    @pytest.mark.parametrize("name", list(SUITE))
+    def test_suite_matrix_specs(self, name):
+        """Scaled synthetic matrices keep the published nnz-per-row profile."""
+        m = suite_matrix(name, scale=0.01, seed=0)
+        spec = SUITE[name]
+        target_nnz_per_row = spec.density * spec.cols
+        got = m.nnz / m.shape[0]
+        assert got == pytest.approx(target_nnz_per_row, rel=0.5)
+
+    def test_pad_to_blocks(self):
+        a = np.ones((5, 7), np.float32)
+        p = pad_to_blocks(a, (4, 4))
+        assert p.shape == (8, 8)
+        assert np.array_equal(p[:5, :7], a)
+        assert p[5:].sum() == 0 and p[:, 7:].sum() == 0

@@ -1,0 +1,79 @@
+"""Host symbolic-phase (static schedule) invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.schedule import build_spgemm_schedule
+from repro.sparse.convert import to_bcsr, to_bcsv
+from repro.sparse.random import random_block_sparse
+
+
+def _inputs(seed, group=2, da=0.3, db=0.35):
+    ad = random_block_sparse(128, 96, (16, 16), da, seed=seed)
+    bd = random_block_sparse(96, 128, (16, 32), db, seed=seed + 1)
+    return (to_bcsv(ad, (16, 16), group=group), to_bcsr(bd, (16, 32)),
+            ad, bd)
+
+
+class TestScheduleInvariants:
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 1000), group=st.integers(1, 4))
+    def test_panel_runs_are_contiguous(self, seed, group):
+        """Pallas output revisiting is only safe when each panel is
+        visited in one contiguous run."""
+        a, b, _, _ = _inputs(seed, group)
+        s = build_spgemm_schedule(a, b)
+        seen = set()
+        prev = None
+        for pnl in s.panel:
+            if pnl != prev:
+                assert pnl not in seen, "panel revisited non-contiguously"
+                seen.add(pnl)
+                prev = pnl
+
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 1000), group=st.integers(1, 4))
+    def test_start_marks_first_triple_of_each_panel(self, seed, group):
+        a, b, _, _ = _inputs(seed, group)
+        s = build_spgemm_schedule(a, b)
+        first_seen = set()
+        for t in range(s.num_triples):
+            if s.start[t]:
+                assert s.panel[t] not in first_seen
+                first_seen.add(s.panel[t])
+            else:
+                assert s.panel[t] in first_seen
+        assert len(first_seen) == s.n_panels
+
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 1000))
+    def test_c_structure_is_symbolic_gustavson(self, seed):
+        """C's block support == support of |A| @ |B| at block granularity."""
+        a, b, ad, bd = _inputs(seed)
+        s = build_spgemm_schedule(a, b)
+        bm, bk = a.block_shape
+        bn = b.block_shape[1]
+        amask = np.abs(ad).reshape(ad.shape[0] // bm, bm, -1, bk).sum((1, 3)) > 0
+        bmask = np.abs(bd).reshape(bd.shape[0] // bk, bk, -1, bn).sum((1, 3)) > 0
+        cmask = (amask.astype(int) @ bmask.astype(int)) > 0
+        got = np.zeros_like(cmask)
+        got[s.c_brow, s.c_bcol] = True
+        assert np.array_equal(got, cmask)
+
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 1000), group=st.integers(1, 4))
+    def test_a_slots_cover_every_useful_a_block(self, seed, group):
+        a, b, _, _ = _inputs(seed, group)
+        s = build_spgemm_schedule(a, b)
+        # Every triple references valid slots.
+        assert (s.a_slot >= 0).all() and (s.a_slot < a.nnzb).all()
+        assert (s.b_slot >= 0).all() and (s.b_slot < b.nnzb).all()
+        assert (s.sub_row >= 0).all() and (s.sub_row < group).all()
+
+    def test_b_fetch_count_reflects_sharing(self):
+        """Within one (group, j) panel, triples with the same k share one
+        fetched B block — consecutive b_slot runs."""
+        a, b, _, _ = _inputs(3, group=4)
+        s = build_spgemm_schedule(a, b)
+        assert s.b_fetches() <= s.num_triples
+        assert s.block_omar() >= 0.0

@@ -1,0 +1,228 @@
+"""Substrate tests: data pipeline, optimizer, checkpointing (atomic +
+verify + elastic), trainer fault tolerance, straggler detection,
+heartbeats, gradient compression."""
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.registry import get_reduced
+from repro.data.pipeline import SyntheticLM, batch_specs
+from repro.models import transformer as tr
+from repro.optim import AdamW, clip_by_global_norm, constant, warmup_cosine
+from repro.optim.compress import ef_compress, ef_decompress, ef_init
+from repro.runtime.heartbeat import Heartbeat, check_peers
+from repro.runtime.steps import make_train_step
+from repro.runtime.straggler import StragglerDetector
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+class TestData:
+    def test_deterministic_and_step_indexed(self):
+        cfg = get_reduced("granite-3-2b")
+        d = SyntheticLM(cfg, 4, 32, seed=7)
+        b1, b2 = d.batch_at(3), d.batch_at(3)
+        assert np.array_equal(b1["tokens"], b2["tokens"])
+        assert not np.array_equal(d.batch_at(4)["tokens"], b1["tokens"])
+
+    def test_labels_are_next_tokens(self):
+        cfg = get_reduced("granite-3-2b")
+        b = SyntheticLM(cfg, 2, 16).batch_at(0)
+        # structured streams: labels shifted by one
+        assert b["tokens"].shape == b["labels"].shape
+
+    def test_specs_match_batches(self):
+        for arch in ("granite-3-2b", "hubert-xlarge", "paligemma-3b"):
+            cfg = get_reduced(arch)
+            b = SyntheticLM(cfg, 2, 32).batch_at(0)
+            specs = batch_specs(cfg, 2, 32)
+            assert set(b) == set(specs)
+            for k in b:
+                assert tuple(b[k].shape) == tuple(specs[k].shape), k
+
+    def test_prefetch_iterator(self):
+        cfg = get_reduced("granite-3-2b")
+        it = SyntheticLM(cfg, 2, 16).iter(start_step=5)
+        first = next(it)
+        assert np.array_equal(first["tokens"],
+                              SyntheticLM(cfg, 2, 16).batch_at(5)["tokens"])
+
+
+class TestOptim:
+    def test_adamw_converges_quadratic(self):
+        opt = AdamW(lr=0.1)
+        params = {"w": jnp.asarray([3.0, -2.0])}
+        state = opt.init(params)
+        for _ in range(200):
+            grads = {"w": 2 * params["w"]}  # d/dw ||w||^2
+            params, state = opt.update(grads, state, params)
+        assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+    def test_master_weights_bf16_params(self):
+        opt = AdamW(lr=0.05, master=True)
+        params = {"w": jnp.asarray([1.0], jnp.bfloat16)}
+        state = opt.init(params)
+        assert state["master"]["w"].dtype == jnp.float32
+        for _ in range(10):
+            params, state = opt.update({"w": jnp.asarray([0.001], jnp.bfloat16)},
+                                       state, params)
+        # master accumulates sub-bf16 updates that params alone would lose
+        assert params["w"].dtype == jnp.bfloat16
+
+    def test_clip(self):
+        tree = {"a": jnp.ones(4) * 10.0}
+        clipped, norm = clip_by_global_norm(tree, 1.0)
+        assert float(norm) == pytest.approx(20.0)
+        _, norm2 = clip_by_global_norm(clipped, 1.0)
+        assert float(norm2) == pytest.approx(1.0, rel=1e-3)
+
+    def test_schedules(self):
+        f = warmup_cosine(1.0, 10, 100)
+        assert float(f(jnp.asarray(0))) == 0.0
+        assert float(f(jnp.asarray(10))) == pytest.approx(1.0)
+        assert float(f(jnp.asarray(100))) == pytest.approx(0.0, abs=1e-6)
+        assert float(constant(0.3)(jnp.asarray(5))) == pytest.approx(0.3)
+
+    def test_ef_compression_preserves_signal(self):
+        """Error feedback: the accumulated dequantized stream converges to
+        the true gradient sum."""
+        rng = np.random.default_rng(0)
+        g_true = {"w": jnp.asarray(rng.standard_normal(256), jnp.float32)}
+        res = ef_init(g_true)
+        acc = jnp.zeros(256)
+        for _ in range(50):
+            q, s, res = ef_compress(g_true, res)
+            acc = acc + ef_decompress(q, s)["w"]
+        np.testing.assert_allclose(np.asarray(acc) / 50,
+                                   np.asarray(g_true["w"]), atol=2e-3)
+
+
+class TestCheckpoint:
+    def test_atomic_save_restore_verify(self, tmp_path):
+        d = str(tmp_path / "ckpt")
+        mgr = CheckpointManager(d, keep=2)
+        tree = {"a": jnp.arange(10, dtype=jnp.float32),
+                "b": {"c": jnp.ones((3, 4), jnp.bfloat16)}}
+        mgr.save(1, tree)
+        mgr.save(2, tree, blocking=False)
+        mgr.wait()
+        assert mgr.all_steps() == [1, 2]
+        out = mgr.restore(2, tree)
+        np.testing.assert_array_equal(np.asarray(out["a"]),
+                                      np.asarray(tree["a"]))
+
+    def test_retention(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        tree = {"x": jnp.zeros(4)}
+        for s in (1, 2, 3, 4):
+            mgr.save(s, tree)
+        assert mgr.all_steps() == [3, 4]
+
+    def test_corruption_detected(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        tree = {"x": jnp.arange(100, dtype=jnp.float32)}
+        mgr.save(5, tree)
+        # flip bytes in the chunk
+        chunk = os.path.join(str(tmp_path), "step_000000005", "chunk_00000.npy")
+        with open(chunk, "r+b") as f:
+            f.seek(-8, 2)
+            f.write(b"corrupt!")
+        with pytest.raises(IOError):
+            mgr.restore(5, tree)
+
+    def test_interrupted_save_is_invisible(self, tmp_path):
+        """A .tmp directory (crash mid-save) must not be listed."""
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        mgr.save(1, {"x": jnp.zeros(2)})
+        os.makedirs(os.path.join(str(tmp_path), "step_000000009.tmp"))
+        assert mgr.all_steps() == [1]
+        assert mgr.latest_step() == 1
+
+    def test_elastic_reshard_on_load(self, tmp_path):
+        """Checkpoints restore onto a different sharding layout."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        mgr = CheckpointManager(str(tmp_path), keep=1)
+        tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+        mgr.save(1, tree)
+        mesh = jax.make_mesh((1,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        sh = {"w": NamedSharding(mesh, P("data", None))}
+        out = mgr.restore(1, tree, shardings=sh)
+        assert out["w"].sharding == sh["w"]
+        np.testing.assert_array_equal(np.asarray(out["w"]),
+                                      np.asarray(tree["w"]))
+
+
+class TestTrainerFT:
+    def _mk(self, tmp, steps, total=30):
+        cfg = get_reduced("granite-3-2b")
+        params = tr.init_lm(jax.random.PRNGKey(0), cfg)
+        opt = AdamW(lr=1e-3)
+        opt_state = opt.init(params)
+        step_fn = jax.jit(make_train_step(cfg, opt))
+        data = SyntheticLM(cfg, 4, 32)
+
+        def batches():
+            s = 0
+            while True:
+                yield {k: jnp.asarray(v) for k, v in data.batch_at(s).items()}
+                s += 1
+
+        tc = TrainerConfig(total_steps=total, ckpt_dir=tmp, ckpt_every=10,
+                           log_every=10, install_signal_handlers=False,
+                           heartbeat=False)
+        return Trainer(tc, step_fn, batches(), params, opt_state)
+
+    def test_run_checkpoints_and_resumes(self, tmp_path):
+        d = str(tmp_path)
+        t1 = self._mk(d, 0, total=20)
+        res = t1.run()
+        assert res["final_step"] == 20
+        # a fresh trainer resumes at 20 and continues to 25
+        t2 = self._mk(d, 0, total=25)
+        res2 = t2.run()
+        assert res2["final_step"] == 25
+        assert t2.ckpt.latest_step() == 25
+
+    def test_preemption_checkpoint(self, tmp_path):
+        t = self._mk(str(tmp_path), 0, total=1000)
+        t._preempted = True  # simulate SIGTERM raced before the loop
+        res = t.run()
+        assert res["preempted"]
+        assert t.ckpt.latest_step() is not None
+
+
+class TestStragglerAndHeartbeat:
+    def test_straggler_fires_on_sustained_slowdown(self):
+        det = StragglerDetector(patience=2, warmup=3)
+        for i in range(20):
+            det.observe(i, 0.10 + 0.001 * (i % 3))
+        assert not det.events
+        fired = False
+        for i in range(20, 26):
+            fired |= det.observe(i, 0.50)  # 5x slowdown
+        assert fired and det.events
+
+    def test_straggler_ignores_single_spike(self):
+        det = StragglerDetector(patience=3, warmup=3)
+        for i in range(15):
+            det.observe(i, 0.1)
+        assert not det.observe(15, 0.9)  # single spike, patience not met
+        for i in range(16, 30):
+            det.observe(i, 0.1)
+        assert not det.events
+
+    def test_heartbeat_files(self, tmp_path):
+        hb = Heartbeat(str(tmp_path), host="h0", interval=0.05)
+        hb.start()
+        import time
+        time.sleep(0.2)
+        hb.stop()
+        peers = check_peers(str(tmp_path), timeout=5.0)
+        assert peers["alive"] == ["h0"]
+        assert check_peers(str(tmp_path), timeout=0.0)["dead"] == ["h0"]

@@ -1,0 +1,93 @@
+"""End-to-end system behaviour: the paper's full pipeline (load -> convert
+-> SpGEMM -> store) and the analytical models (Sec. 4.2.4, 5.3)."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.gustavson import FSpGEMMSimulator, gustavson_flops, spgemm_gustavson
+from repro.core.perfmodel import (
+    CPU_XEON_E5_2637,
+    FPGA_ARRIA10,
+    GPU_TITAN_X,
+    PAPER_TABLE7_MS,
+    PAPER_TABLE8_STUF,
+    energy,
+    runtime_from_stuf,
+    stuf,
+)
+from repro.core.tuning import ARRIA10_GX, derive_fpga_params, fpga_runtime_model, tpu_tile_params
+from repro.kernels import ops
+from repro.sparse.convert import to_bcsr, to_bcsv, to_csr, to_csv
+from repro.sparse.io import load_csv, read_matrix_market, save_csv, write_matrix_market
+from repro.sparse.random import random_coo, suite_matrix
+
+
+class TestPaperPipeline:
+    def test_end_to_end_mtx_to_csv_to_result(self, tmp_path):
+        """The host program's full path: raw matrix file -> CSV (stored
+        once) -> FPGA-kernel simulation -> result."""
+        a = suite_matrix("poisson3Da", scale=0.005, seed=1)
+        mtx = str(tmp_path / "a.mtx")
+        write_matrix_market(mtx, a)
+        loaded = to_csr(read_matrix_market(mtx))
+        csvf = str(tmp_path / "a_csv")
+        save_csv(csvf, to_csv(loaded, 8))
+        csv = load_csv(csvf)
+        csv.validate()
+        c, stats = FSpGEMMSimulator(8, 16).run(csv, loaded)
+        ref = spgemm_gustavson(loaded, loaded)
+        np.testing.assert_allclose(c.todense(), ref.todense(),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_block_pipeline_matches_element_pipeline(self):
+        """TPU (block) path result == paper-faithful (element) path."""
+        a = suite_matrix("scircuit", scale=0.004, seed=2)
+        b = a
+        ref = spgemm_gustavson(a, b).todense()
+        pad = 64
+        m, k = a.shape
+        mp = -(-m // pad) * pad
+        kp = -(-k // pad) * pad
+        ad = np.zeros((mp, kp), np.float32)
+        ad[:m, :k] = a.todense()
+        bd = np.zeros((kp, mp), np.float32)
+        bd[:k, :m] = b.todense()
+        c = ops.spgemm(to_bcsv(ad, (64, 64), 2), to_bcsr(bd, (64, 64)),
+                       backend="jnp")
+        np.testing.assert_allclose(c.todense()[:m, :m], ref, rtol=2e-3,
+                                   atol=2e-3)
+
+
+class TestAnalyticalModels:
+    def test_fpga_params_reproduce_paper(self):
+        """Sec. 4.2.4's published optimum: SW=16, NUM_PE=32 on Arria 10."""
+        assert derive_fpga_params(ARRIA10_GX) == (16, 32)
+
+    def test_runtime_model_consistency(self):
+        """R = N_ops/(F*2*SW*NUM_PE*U) and U = N_ops/(F*P*R) invert."""
+        n_ops = 1.0e9
+        r = fpga_runtime_model(n_ops, ARRIA10_GX, stuf=0.5)
+        u = stuf(n_ops, FPGA_ARRIA10, r)
+        # P differs: the model uses busy DSPs (512*2); STUF normalizes by
+        # all 1518 DSPs -> u = 0.5 * (512/1518)
+        assert u == pytest.approx(0.5 * 512.0 / 1518.0, rel=1e-6)
+
+    def test_stuf_tables_consistent(self):
+        for name, stufs in PAPER_TABLE8_STUF.items():
+            a = suite_matrix(name, scale=0.002, seed=0)
+            n_ops = gustavson_flops(a, a)
+            r = runtime_from_stuf(n_ops, FPGA_ARRIA10, stufs["fspgemm"])
+            assert r > 0
+
+    def test_energy_model(self):
+        assert energy(2.0, FPGA_ARRIA10) == pytest.approx(37.0)
+        assert energy(1.0, CPU_XEON_E5_2637) == pytest.approx(128.0)
+
+    def test_tpu_tile_params_constraints(self):
+        bm, bk, bn, g = tpu_tile_params()
+        assert bm % 128 == 0 and bk % 128 == 0 and bn % 128 == 0
+        from repro.core.tuning import TPU_V5E
+        acc = g * bm * bn * 4
+        assert acc + 2 * bk * bn * 4 + 2 * bm * bk * 4 <= TPU_V5E.vmem_bytes * 0.7
+        assert g >= 1
