@@ -1,23 +1,25 @@
 """Kernel microbenchmarks (interpret/jnp on CPU — correctness-scale only;
 wall-times here are NOT TPU numbers, the roofline report covers those).
 
-Reports the schedule-level reuse metrics that determine TPU performance:
-triples, B-fetch elision (block OMAR), and arithmetic intensity per kernel.
+Reports the plan-level reuse metrics that determine TPU performance
+(triples, B-fetch elision / block OMAR, arithmetic intensity) via the
+plan/execute API, plus the amortization the API exists for: plan-build
+time vs numeric-only execute time on the same pattern.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import timeit
-from repro.core.schedule import build_spgemm_schedule
 from repro.kernels import ops
 from repro.sparse.convert import to_bcsr, to_bcsv
 from repro.sparse.random import random_block_sparse
+from repro.spgemm import PlanCache, spgemm_plan
 
 
 def run(quiet: bool = False):
     print("kernels,case,triples,b_fetches,block_omar_pct,flops,"
-          "bytes_streamed,arith_intensity")
+          "bytes_streamed,arith_intensity,plan_ms,execute_ms")
     for (m, k, n, da, db, g) in [
         (512, 512, 512, 0.2, 0.2, 2),
         (1024, 512, 1024, 0.1, 0.15, 4),
@@ -26,26 +28,52 @@ def run(quiet: bool = False):
         bm = bk = bn = 128
         ad = random_block_sparse(m, k, (bm, bk), da, seed=1)
         bd = random_block_sparse(k, n, (bk, bn), db, seed=2)
-        a = to_bcsv(ad, (bm, bk), group=g)
-        b = to_bcsr(bd, (bk, bn))
-        s = build_spgemm_schedule(a, b)
-        flops = 2 * s.num_triples * bm * bk * bn
+        cache = PlanCache()
+
+        def build_plan():
+            cache.clear()
+            return spgemm_plan(ad, bd, tile=(bm, bk, bn), group=g,
+                               backend="jnp", cache=cache)
+
+        plan = build_plan()
+        rep = plan.report
+        flops = 2 * rep.num_triples * bm * bk * bn
         # HBM bytes: A streamed once; B fetched per elided schedule; C
         # panels written once.
-        bytes_ = (a.nnzb * bm * bk + s.b_fetches() * bk * bn
-                  + s.n_panels * g * bm * bn) * 4
+        bytes_ = (rep.nnzb_a * bm * bk + rep.b_fetches * bk * bn
+                  + rep.n_panels * g * bm * bn) * 4
         ai = flops / bytes_
-        print(f"kernels,spgemm_{m}x{k}x{n}_g{g},{s.num_triples},"
-              f"{s.b_fetches()},{s.block_omar():.1f},{flops:.2e},"
-              f"{bytes_:.2e},{ai:.1f}")
+        # Amortization: full plan build (conversion + symbolic + staging)
+        # vs numeric-only execute with fresh values on the cached plan.
+        plan_ms = timeit(build_plan, repeats=3, warmup=0) * 1e3
+        a_vals = plan.a_pattern.val * 0.5
+        b_vals = plan.b_pattern.val * 2.0
+        exec_ms = timeit(lambda: plan.execute(a_vals, b_vals),
+                         repeats=3, warmup=1) * 1e3
+        print(f"kernels,spgemm_{m}x{k}x{n}_g{g},{rep.num_triples},"
+              f"{rep.b_fetches},{rep.block_omar:.1f},{flops:.2e},"
+              f"{bytes_:.2e},{ai:.1f},{plan_ms:.1f},{exec_ms:.1f}")
 
-    # correctness spot (pallas interpret vs dense) as part of the bench
+    # Plan reuse correctness: fresh values on a cached plan match a fresh
+    # dense reference (the serving loop's invariant).
     ad = random_block_sparse(256, 256, (64, 64), 0.3, seed=3)
     bd = random_block_sparse(256, 256, (64, 64), 0.3, seed=4)
-    c = ops.spgemm(to_bcsv(ad, (64, 64), 2), to_bcsr(bd, (64, 64)),
-                   backend="pallas_interpret")
+    plan = spgemm_plan(ad, bd, tile=64, group=2,
+                       backend="pallas_interpret", cache=PlanCache())
+    c = plan.execute()
     err = np.abs(c.todense() - ad @ bd).max()
-    print(f"kernels,spgemm_pallas_interpret_maxerr,{err:.2e}")
+    print(f"kernels,spgemm_plan_interpret_maxerr,{err:.2e}")
+    a2 = np.zeros_like(ad)
+    a2[plan.a_pattern.row, plan.a_pattern.col] = plan.a_pattern.val * 3.0
+    c2 = plan.execute(plan.a_pattern.val * 3.0, None)
+    err2 = np.abs(c2.todense() - a2 @ bd).max()
+    print(f"kernels,spgemm_plan_reexec_maxerr,{err2:.2e}")
+
+    # Compatibility shim spot-check (ops.spgemm -> cached plan).
+    c3 = ops.spgemm(to_bcsv(ad, (64, 64), 2), to_bcsr(bd, (64, 64)),
+                    backend="pallas_interpret")
+    err3 = np.abs(c3.todense() - ad @ bd).max()
+    print(f"kernels,spgemm_ops_shim_maxerr,{err3:.2e}")
 
 
 def main():

@@ -1,7 +1,10 @@
 """Benchmark driver: one section per paper table/figure + the roofline
-report. ``PYTHONPATH=src python -m benchmarks.run``"""
+report. ``PYTHONPATH=src python -m benchmarks.run``
+
+Exits nonzero when any section fails so CI can gate on it."""
 from __future__ import annotations
 
+import sys
 import traceback
 
 from benchmarks import (
@@ -38,6 +41,8 @@ def main() -> None:
     print("\n=== benchmarks done"
           + (f" ({len(failures)} section(s) failed: {failures})"
              if failures else " (all sections passed)"))
+    if failures:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -27,8 +27,52 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.config import ModelConfig
+from repro.sparse.formats import COO
 
-__all__ = ["SyntheticLM", "batch_specs", "shard_batch"]
+__all__ = ["SyntheticLM", "SpGEMMValueStream", "batch_specs", "shard_batch"]
+
+
+def _prefetch_iter(batch_at, start_step: int, prefetch: int) -> Iterator[Dict]:
+    """Background-thread prefetching iterator over ``batch_at(step)``.
+
+    The producer uses a timed ``put`` so it re-checks the stop flag even
+    while the queue is full — dropping the iterator can never leak a
+    thread blocked in ``q.put``. A ``batch_at`` failure is forwarded and
+    re-raised in the consumer instead of silently killing the producer
+    (which would deadlock the consumer in ``q.get``).
+    """
+    q: queue.Queue = queue.Queue(maxsize=prefetch)
+    stop = threading.Event()
+
+    def _put(item) -> bool:
+        while not stop.is_set():
+            try:
+                q.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def producer():
+        step = start_step
+        try:
+            while not stop.is_set():
+                if not _put(("batch", batch_at(step))):
+                    return
+                step += 1
+        except BaseException as e:  # forward to the consumer
+            _put(("error", e))
+
+    t = threading.Thread(target=producer, daemon=True)
+    t.start()
+    try:
+        while True:
+            kind, payload = q.get()
+            if kind == "error":
+                raise payload
+            yield payload
+    finally:
+        stop.set()
 
 
 class SyntheticLM:
@@ -94,22 +138,64 @@ class SyntheticLM:
 
     def iter(self, start_step: int = 0, prefetch: int = 2) -> Iterator[Dict]:
         """Background-thread prefetching iterator starting at start_step."""
-        q: queue.Queue = queue.Queue(maxsize=prefetch)
-        stop = threading.Event()
+        return _prefetch_iter(self.batch_at, start_step, prefetch)
 
-        def producer():
-            step = start_step
-            while not stop.is_set():
-                q.put(self.batch_at(step))
-                step += 1
 
-        t = threading.Thread(target=producer, daemon=True)
-        t.start()
-        try:
-            while True:
-                yield q.get()
-        finally:
-            stop.set()
+class SpGEMMValueStream:
+    """Serving-shaped SpGEMM workload: one fixed sparsity pattern, fresh
+    values every step.
+
+    This is the input side of the plan/execute split
+    (:mod:`repro.spgemm`): the pattern is fixed at construction — exactly
+    what a cached :class:`~repro.spgemm.plan.SpGEMMPlan` amortizes over —
+    and ``values_at(step)`` is a pure function of ``(seed, step)``, so the
+    stream has the same step-indexed determinism/restart properties as
+    :class:`SyntheticLM`.
+
+    ``integer_values=True`` draws small integers (exact in float32 under
+    any accumulation order) so results can be compared bit-for-bit against
+    the ``spgemm_gustavson`` oracle.
+    """
+
+    def __init__(
+        self,
+        a_pattern: COO,
+        b_pattern: COO,
+        seed: int = 0,
+        integer_values: bool = False,
+    ):
+        if a_pattern.shape[1] != b_pattern.shape[0]:
+            raise ValueError(
+                f"inner dims mismatch: {a_pattern.shape} x {b_pattern.shape}"
+            )
+        self.a_pattern = a_pattern
+        self.b_pattern = b_pattern
+        self.seed = seed
+        self.integer_values = integer_values
+
+    def _vals(self, rng: np.random.Generator, nnz: int) -> np.ndarray:
+        if self.integer_values:
+            v = rng.integers(-4, 5, nnz).astype(np.float32)
+            return np.where(v == 0, np.float32(1.0), v)
+        return rng.standard_normal(nnz).astype(np.float32)
+
+    def values_at(self, step: int):
+        """Fresh ``(a_vals, b_vals)`` for this step, aligned with the
+        patterns' canonical coordinate order."""
+        rng = np.random.default_rng((self.seed, step))
+        return (
+            self._vals(rng, self.a_pattern.nnz),
+            self._vals(rng, self.b_pattern.nnz),
+        )
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        a_vals, b_vals = self.values_at(step)
+        return {"a_vals": a_vals, "b_vals": b_vals}
+
+    def iter(self, start_step: int = 0, prefetch: int = 2) -> Iterator[Dict]:
+        """Background-thread prefetching iterator (same contract as
+        :meth:`SyntheticLM.iter`)."""
+        return _prefetch_iter(self.batch_at, start_step, prefetch)
 
 
 def batch_specs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, jax.ShapeDtypeStruct]:

@@ -9,4 +9,16 @@ interpret mode against ref.py):
 * ``moe_gmm`` — grouped matmul over expert-sorted tokens (MoE dispatch).
 * ``flash_attention`` — online-softmax tiled attention (prefill).
 """
-from repro.kernels import ops, ref
+from repro.kernels import ref
+
+# ``ops`` is imported lazily: it shims spgemm onto repro.spgemm, which in
+# turn imports the leaf kernel modules from this package — an eager import
+# here would close that cycle.
+
+
+def __getattr__(name):
+    if name == "ops":
+        import importlib
+
+        return importlib.import_module("repro.kernels.ops")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,8 @@
+"""Pallas API compatibility shims shared by the kernels."""
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams across releases; run with
+# whichever this jax provides.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)

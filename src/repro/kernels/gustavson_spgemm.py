@@ -32,6 +32,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 __all__ = ["spgemm_scheduled", "pad_schedule_arrays"]
 
 
@@ -139,7 +141,7 @@ def spgemm_scheduled(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_panels + 1, group * bm, bn), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",),
         ),
     )(a_slot, b_slot, panel, sub_row, start, a_blocks, b_blocks)

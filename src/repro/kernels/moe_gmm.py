@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 __all__ = ["moe_gmm"]
 
 
@@ -74,7 +76,7 @@ def moe_gmm(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((t, f), out_dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
         ),
     )(tile_expert, x, w)

@@ -19,13 +19,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.schedule import SpGEMMSchedule, build_spgemm_schedule
+from repro.core.schedule import SpGEMMSchedule
 from repro.kernels import ref
 from repro.kernels.bsr_spmm import bsr_spmm, plan_bsr
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.gustavson_spgemm import pad_schedule_arrays, spgemm_scheduled
 from repro.kernels.moe_gmm import moe_gmm
-from repro.sparse.formats import BCSR, BCSV, COO, CSR
+from repro.sparse.formats import BCSR, BCSV, CSR
+from repro.spgemm.cache import PlanCache
+from repro.spgemm.plan import SpGEMMPlan, resolve_backend, spgemm_plan
 
 __all__ = [
     "resolve_backend",
@@ -36,16 +37,8 @@ __all__ = [
 ]
 
 
-def resolve_backend(backend: str = "auto") -> str:
-    if backend == "auto":
-        return "pallas" if jax.default_backend() == "tpu" else "jnp"
-    if backend not in ("pallas", "pallas_interpret", "jnp"):
-        raise ValueError(f"unknown backend {backend!r}")
-    return backend
-
-
 # ---------------------------------------------------------------------------
-# Sparse x sparse: the paper's SpGEMM, end to end
+# Sparse x sparse: compatibility shim over the plan/execute API
 # ---------------------------------------------------------------------------
 
 def spgemm(
@@ -54,60 +47,33 @@ def spgemm(
     *,
     backend: str = "auto",
     schedule: Optional[SpGEMMSchedule] = None,
+    cache: Optional[PlanCache] = None,
 ) -> CSR:
     """C = A @ B for block-sparse A (BCSV) and B (BCSR).
 
-    Host symbolic phase (the paper's pre-processing, Sec. 4.3) builds the
-    static triple schedule; the device phase runs the scheduled kernel; the
-    host scatters the output panels into C's block structure.
+    Thin compatibility shim over :mod:`repro.spgemm`: builds — or fetches
+    from the plan cache (process-level by default; pass ``cache`` to
+    isolate) — an :class:`SpGEMMPlan` for this sparsity pattern and runs
+    its numeric phase with the given values. Callers that reuse one
+    pattern should hold a plan directly (``repro.spgemm.spgemm_plan``)
+    instead of round-tripping through here.
     """
-    backend = resolve_backend(backend)
-    sch = schedule if schedule is not None else build_spgemm_schedule(a, b)
-    bm, bk = a.block_shape
-    bn = b.block_shape[1]
-    group = a.group
-    if sch.num_triples == 0:
-        m, n = a.shape[0], b.shape[1]
-        return CSR(np.zeros(m + 1, np.int64), np.zeros(0, np.int32),
-                   np.zeros(0, np.float32), (m, n))
-
-    if backend in ("pallas", "pallas_interpret"):
-        a_slot, b_slot, panel, sub_row, start, _ = pad_schedule_arrays(
-            sch.a_slot, sch.b_slot, sch.panel, sch.sub_row, sch.start,
-            sch.n_panels,
-        )
-        panels = spgemm_scheduled(
-            jnp.asarray(a.blocks),
-            jnp.asarray(b.blocks),
-            jnp.asarray(a_slot),
-            jnp.asarray(b_slot),
-            jnp.asarray(panel),
-            jnp.asarray(sub_row),
-            jnp.asarray(start),
-            n_panels=sch.n_panels,
-            group=group,
-            interpret=(backend == "pallas_interpret"
-                       or jax.default_backend() != "tpu"),
-        )
-    else:
-        panels = ref.spgemm_scheduled_ref(
-            jnp.asarray(a.blocks), jnp.asarray(b.blocks),
-            sch.a_slot, sch.b_slot, sch.panel, sch.sub_row,
-            sch.n_panels, group,
-        )
-    panels = np.asarray(panels)
-
-    # Host scatter: panels -> C dense blocks -> CSR (paper's store kernel +
-    # host read-back).
-    m, n = a.shape[0], b.shape[1]
-    out = np.zeros((m, n), np.float32)
-    for p in range(sch.n_panels):
-        g = int(sch.panel_group[p])
-        j = int(sch.panel_bcol[p])
-        r0 = g * group * bm
-        rows = min(group * bm, m - r0)
-        out[r0 : r0 + rows, j * bn : (j + 1) * bn] = panels[p][:rows]
-    return CSR.from_coo(COO.fromdense(out))
+    if schedule is not None:
+        # Caller already ran the symbolic phase; honor it without caching.
+        plan = SpGEMMPlan.from_blocks(a, b, backend=backend, schedule=schedule)
+        return plan.execute()
+    plan = spgemm_plan(a, b, backend=backend, cache=cache)
+    try:
+        # Passing values explicitly makes the rebind + launch atomic even
+        # when the cached plan is shared across threads.
+        return plan.execute(a.blocks, b.blocks)
+    finally:
+        # One-shot semantics: free the device copies (the scarce resource)
+        # but keep host values staged — the plan is shared with any direct
+        # spgemm_plan holder of this pattern, whose no-arg execute() must
+        # keep working. Host-side this pins only references to the
+        # caller's own block arrays, bounded by the cache capacity.
+        plan.release_device_values()
 
 
 # ---------------------------------------------------------------------------

@@ -20,10 +20,8 @@ def to_coo(a: Union[np.ndarray, AnySparse]) -> COO:
         return COO.fromdense(a)
     if isinstance(a, COO):
         return a
-    if isinstance(a, (CSR, CSC, CSV)):
+    if isinstance(a, (CSR, CSC, CSV, BCSR, BCSV)):
         return a.to_coo()
-    if isinstance(a, (BCSR, BCSV)):
-        return COO.fromdense(a.todense())
     raise TypeError(f"cannot convert {type(a)} to COO")
 
 
@@ -55,14 +53,100 @@ def to_csv(a: Union[np.ndarray, AnySparse], num_pe: int) -> CSV:
     return CSV.from_coo(to_coo(a).sum_duplicates(), num_pe)
 
 
+def _block_coords(
+    coo: COO, block_shape: Tuple[int, int]
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, Tuple[int, int]]:
+    """Per-nonzero block ids for a *deduplicated* COO, plus the padded grid.
+
+    Returns ``(brow, bcol, bid, (gm, gk))`` where ``bid = brow * gk + bcol``
+    is a single sortable block key. The grid covers ceil-divided (padded)
+    dims, so no dense padding is ever materialized.
+    """
+    bm, bk = block_shape
+    m, k = coo.shape
+    gm, gk = -(-m // bm), -(-k // bk)
+    brow = (coo.row // bm).astype(np.int64)
+    bcol = (coo.col // bk).astype(np.int64)
+    return brow, bcol, brow * gk + bcol, (gm, gk)
+
+
+def bcsr_from_coo(
+    coo: COO, block_shape: Tuple[int, int]
+) -> Tuple[BCSR, np.ndarray]:
+    """Sparse-native COO -> BCSR: O(nnz log nnz), never densifies.
+
+    ``coo`` must have unique coordinates (``sum_duplicates`` first).
+    Returns the BCSR plus ``scatter``: flat indices into ``blocks`` such
+    that ``blocks.reshape(-1)[scatter] = coo.val`` re-materializes the
+    packed value array from a fresh value vector in ``coo`` order — the
+    numeric-phase rebind used by SpGEMMPlan.execute.
+    """
+    bm, bk = block_shape
+    brow, bcol, bid, (gm, gk) = _block_coords(coo, block_shape)
+    ub = np.unique(bid)  # ascending == (brow, bcol) block-row-major
+    slot = np.searchsorted(ub, bid)
+    scatter = slot * (bm * bk) + (coo.row % bm).astype(np.int64) * bk + (
+        coo.col % bk
+    ).astype(np.int64)
+    blocks = np.zeros((ub.shape[0], bm, bk), coo.val.dtype)
+    blocks.reshape(-1)[scatter] = coo.val
+    ubr, ubc = ub // gk, ub % gk
+    indptr = np.zeros(gm + 1, dtype=np.int64)
+    np.add.at(indptr, ubr + 1, 1)
+    np.cumsum(indptr, out=indptr)
+    return (
+        BCSR(indptr, ubc.astype(np.int32), blocks, (gm * bm, gk * bk)),
+        scatter,
+    )
+
+
+def bcsv_from_coo(
+    coo: COO, block_shape: Tuple[int, int], group: int
+) -> Tuple[BCSV, np.ndarray]:
+    """Sparse-native COO -> BCSV (vector-major block order), never densifies.
+
+    Same contract as :func:`bcsr_from_coo`: unique coordinates in, format
+    plus flat ``scatter`` indices out.
+    """
+    bm, bk = block_shape
+    brow, bcol, bid, (gm, gk) = _block_coords(coo, block_shape)
+    ub = np.unique(bid)
+    ubr, ubc = ub // gk, ub % gk
+    # Vector-major order: (block-row group, bcol, brow).
+    order = np.lexsort((ubr, ubc, ubr // group))
+    rank = np.empty(ub.shape[0], np.int64)
+    rank[order] = np.arange(ub.shape[0])
+    slot = rank[np.searchsorted(ub, bid)]
+    scatter = slot * (bm * bk) + (coo.row % bm).astype(np.int64) * bk + (
+        coo.col % bk
+    ).astype(np.int64)
+    blocks = np.zeros((ub.shape[0], bm, bk), coo.val.dtype)
+    blocks.reshape(-1)[scatter] = coo.val
+    sbr, sbc = ubr[order], ubc[order]
+    n_groups = -(-gm // group)
+    group_ptr = np.zeros(n_groups + 1, dtype=np.int64)
+    np.add.at(group_ptr, (sbr // group) + 1, 1)
+    np.cumsum(group_ptr, out=group_ptr)
+    return (
+        BCSV(
+            blocks,
+            sbr.astype(np.int32),
+            sbc.astype(np.int32),
+            group_ptr,
+            (gm * bm, gk * bk),
+            group,
+        ),
+        scatter,
+    )
+
+
 def to_bcsr(
     a: Union[np.ndarray, AnySparse], block_shape: Tuple[int, int]
 ) -> BCSR:
     if isinstance(a, BCSR) and a.block_shape == tuple(block_shape):
         return a
-    dense = a if isinstance(a, np.ndarray) else to_coo(a).sum_duplicates().todense()
-    dense = pad_to_blocks(dense, block_shape)
-    return BCSR.fromdense(dense, block_shape)
+    bcsr, _ = bcsr_from_coo(to_coo(a).sum_duplicates(), block_shape)
+    return bcsr
 
 
 def to_bcsv(
@@ -74,9 +158,8 @@ def to_bcsv(
         and a.group == group
     ):
         return a
-    dense = a if isinstance(a, np.ndarray) else to_coo(a).sum_duplicates().todense()
-    dense = pad_to_blocks(dense, block_shape)
-    return BCSV.fromdense(dense, block_shape, group)
+    bcsv, _ = bcsv_from_coo(to_coo(a).sum_duplicates(), block_shape, group)
+    return bcsv
 
 
 def pad_to_blocks(a: np.ndarray, block_shape: Tuple[int, int]) -> np.ndarray:

@@ -381,6 +381,21 @@ class BCSR(SparseFormat):
         brows, bcols = np.nonzero(mask)
         return BCSR(indptr, bcols.astype(np.int32), tiles[brows, bcols], (m, n))
 
+    def to_coo(self) -> "COO":
+        """Element-level COO of the stored entries (never densifies)."""
+        bm, bn = self.block_shape
+        s, r, c = np.nonzero(self.blocks)
+        brows = np.repeat(
+            np.arange(self.indptr.shape[0] - 1, dtype=np.int64),
+            np.diff(self.indptr),
+        )
+        row = brows[s] * bm + r
+        col = self.indices[s].astype(np.int64) * bn + c
+        return COO(
+            row.astype(np.int32), col.astype(np.int32), self.blocks[s, r, c],
+            self.shape,
+        )
+
 
 @dataclasses.dataclass(repr=False)
 class BCSV(SparseFormat):
@@ -456,6 +471,17 @@ class BCSV(SparseFormat):
             r, c = int(self.brow[i]), int(self.bcol[i])
             out[r * bm : (r + 1) * bm, c * bk : (c + 1) * bk] = self.blocks[i]
         return out
+
+    def to_coo(self) -> "COO":
+        """Element-level COO of the stored entries (never densifies)."""
+        bm, bk = self.block_shape
+        s, r, c = np.nonzero(self.blocks)
+        row = self.brow[s].astype(np.int64) * bm + r
+        col = self.bcol[s].astype(np.int64) * bk + c
+        return COO(
+            row.astype(np.int32), col.astype(np.int32), self.blocks[s, r, c],
+            self.shape,
+        )
 
     @staticmethod
     def fromdense(

@@ -1,0 +1,39 @@
+"""Plan/execute SpGEMM API (the paper's "pre-process once" claim as code).
+
+Typical use::
+
+    from repro.spgemm import spgemm_plan
+
+    plan = spgemm_plan(a, b, tile=64, group=4, backend="auto")
+    c0 = plan.execute()                     # staged values
+    c1 = plan.execute(a_vals2, b_vals2)     # fresh values, zero symbolic work
+    print(plan.report.block_omar, plan.report.cache_hits)
+
+Plans are cached process-wide on ``(pattern hash, tile, group, backend)``;
+``repro.kernels.ops.spgemm`` is a thin compatibility shim over this package.
+"""
+from repro.spgemm.cache import (
+    CacheStats,
+    PlanCache,
+    default_cache,
+    pattern_digest,
+)
+from repro.spgemm.plan import (
+    PlanReport,
+    SpGEMMPlan,
+    resolve_backend,
+    schedule_build_count,
+    spgemm_plan,
+)
+
+__all__ = [
+    "CacheStats",
+    "PlanCache",
+    "PlanReport",
+    "SpGEMMPlan",
+    "default_cache",
+    "pattern_digest",
+    "resolve_backend",
+    "schedule_build_count",
+    "spgemm_plan",
+]

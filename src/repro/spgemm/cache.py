@@ -1,0 +1,108 @@
+"""Process-level plan cache + sparsity-pattern fingerprinting.
+
+The paper's host program converts inputs "once" (Sec. 4.3); the serving
+north-star multiplies one sparsity pattern with fresh values millions of
+times. The cache makes that amortization automatic: plans are keyed on
+``(pattern hash, tile, group, backend)`` so any caller presenting a
+pattern-equal input gets the already-built plan object back, paying only
+the numeric phase.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import threading
+from collections import OrderedDict
+from typing import Callable, Tuple
+
+import numpy as np
+
+__all__ = ["CacheStats", "PlanCache", "default_cache", "pattern_digest"]
+
+
+def pattern_digest(*arrays: np.ndarray, meta: Tuple = ()) -> str:
+    """Stable hex digest of a sparsity pattern (index arrays + shape meta).
+
+    Values are deliberately excluded — two inputs with the same nonzero
+    support but different values hash identically, which is exactly the
+    plan-reuse contract.
+    """
+    h = hashlib.blake2b(digest_size=16)
+    h.update(repr(meta).encode())
+    for a in arrays:
+        a = np.ascontiguousarray(a)
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+
+class PlanCache:
+    """Thread-safe LRU cache of built :class:`~repro.spgemm.plan.SpGEMMPlan`.
+
+    Keys are ``(pattern_hash, tile, group, backend)`` tuples. ``get_or_build``
+    returns ``(plan, hit)`` so callers can attribute the lookup in their
+    reports.
+    """
+
+    def __init__(self, capacity: int = 64):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self.stats = CacheStats()
+        self._lock = threading.Lock()
+        self._plans: OrderedDict = OrderedDict()
+
+    def get_or_build(self, key: Tuple, builder: Callable):
+        with self._lock:
+            if key in self._plans:
+                self.stats.hits += 1
+                self._plans.move_to_end(key)
+                return self._plans[key], True
+            self.stats.misses += 1
+        # Build outside the lock (symbolic phase can be expensive); a rare
+        # duplicate build under contention is benign — last writer wins.
+        plan = builder()
+        with self._lock:
+            self._plans[key] = plan
+            self._plans.move_to_end(key)
+            while len(self._plans) > self.capacity:
+                self._plans.popitem(last=False)
+                self.stats.evictions += 1
+        return plan, False
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._plans)
+
+    def __contains__(self, key: Tuple) -> bool:
+        with self._lock:
+            return key in self._plans
+
+    def clear(self) -> None:
+        with self._lock:
+            self._plans.clear()
+            self.stats = CacheStats()
+
+
+_DEFAULT_CACHE = PlanCache()
+
+
+def default_cache() -> PlanCache:
+    """The process-level cache used when no explicit cache is passed."""
+    return _DEFAULT_CACHE

@@ -1,7 +1,7 @@
 """OMAR (paper Eq. 1) + buffering-scheme tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _compat_hypothesis import given, settings, st
 
 from repro.core.buffering import (
     b_fetch_trace,

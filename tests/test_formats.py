@@ -1,7 +1,7 @@
 """Sparse format unit + property tests (paper Sec. 2.1, 3)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _compat_hypothesis import given, settings, st
 
 from repro.sparse.convert import (
     csr_to_csv, csv_to_csr, pad_to_blocks, to_bcsr, to_bcsv, to_csc, to_csr,

@@ -2,7 +2,7 @@
 Algorithm 1)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _compat_hypothesis import given, settings, st
 
 from repro.core.gustavson import (
     FSpGEMMSimulator,

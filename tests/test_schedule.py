@@ -1,7 +1,7 @@
 """Host symbolic-phase (static schedule) invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _compat_hypothesis import given, settings, st
 
 from repro.core.schedule import build_spgemm_schedule
 from repro.sparse.convert import to_bcsr, to_bcsv

@@ -1,0 +1,285 @@
+"""Plan/execute SpGEMM API tests: correctness, reuse, caching, and the
+sparse-native conversions (no dense round-trip)."""
+import threading
+import tracemalloc
+
+import numpy as np
+import pytest
+
+from repro.core.gustavson import spgemm_gustavson
+from repro.data.pipeline import SpGEMMValueStream
+from repro.kernels import ops
+from repro.sparse.convert import (
+    bcsr_from_coo,
+    bcsv_from_coo,
+    pad_to_blocks,
+    to_bcsr,
+    to_bcsv,
+    to_csr,
+)
+from repro.sparse.formats import BCSR, BCSV, COO
+from repro.sparse.random import random_block_sparse, random_coo, suite_matrix
+from repro.spgemm import (
+    PlanCache,
+    schedule_build_count,
+    spgemm_plan,
+)
+
+
+def _int_coo(m, n, density, seed):
+    """Sparse matrix with small-integer float32 values: exact in float32
+    under any accumulation order, so oracle comparisons are bit-for-bit."""
+    coo = random_coo(m, n, density, "uniform", seed=seed)
+    rng = np.random.default_rng(seed + 999)
+    vals = rng.integers(-4, 5, coo.nnz).astype(np.float32)
+    coo.val = np.where(vals == 0, np.float32(1.0), vals)
+    return coo
+
+
+class TestPlanCorrectness:
+    @pytest.mark.parametrize("backend", ["pallas_interpret", "jnp"])
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_execute_matches_gustavson_bitwise(self, backend, seed):
+        a = _int_coo(90, 70, 0.08, seed)
+        b = _int_coo(70, 110, 0.1, seed + 10)
+        plan = spgemm_plan(a, b, tile=16, group=2, backend=backend,
+                           cache=PlanCache())
+        c = plan.execute()
+        ref = spgemm_gustavson(to_csr(a), to_csr(b))
+        assert np.array_equal(c.todense(), ref.todense())
+
+    @pytest.mark.parametrize("name", ["poisson3Da", "scircuit", "cage12"])
+    def test_paper_suite_matches_gustavson(self, name):
+        """Acceptance: plan/execute vs spgemm_gustavson on (scaled) paper
+        matrices."""
+        a = suite_matrix(name, scale=0.004)
+        coo = a.to_coo()
+        b = COO(coo.col, coo.row, coo.val, (a.shape[1], a.shape[0]))  # A^T
+        plan = spgemm_plan(a, b, tile=32, group=4,
+                           backend="pallas_interpret", cache=PlanCache())
+        c = plan.execute()
+        ref = spgemm_gustavson(a, to_csr(b))
+        np.testing.assert_allclose(c.todense(), ref.todense(),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_empty_inputs(self):
+        a = COO(np.zeros(0, np.int32), np.zeros(0, np.int32),
+                np.zeros(0, np.float32), (32, 16))
+        b = _int_coo(16, 24, 0.2, 3)
+        plan = spgemm_plan(a, b, tile=8, group=2,
+                           backend="pallas_interpret", cache=PlanCache())
+        c = plan.execute()
+        assert c.nnz == 0 and c.shape == (32, 24)
+
+
+class TestPlanReuse:
+    def test_two_value_sets_match_gustavson_bitwise(self):
+        """One plan, two value sets: both executes match the Gustavson
+        oracle bit-for-bit, with zero extra symbolic work."""
+        a = _int_coo(80, 60, 0.1, 11)
+        b = _int_coo(60, 80, 0.12, 12)
+        plan = spgemm_plan(a, b, tile=16, group=2,
+                           backend="pallas_interpret", cache=PlanCache())
+        builds_after_plan = schedule_build_count()
+
+        stream = SpGEMMValueStream(plan.a_pattern, plan.b_pattern, seed=5,
+                                   integer_values=True)
+        for step in range(2):
+            a_vals, b_vals = stream.values_at(step)
+            c = plan.execute(a_vals, b_vals)
+            ref = spgemm_gustavson(
+                to_csr(COO(plan.a_pattern.row, plan.a_pattern.col, a_vals,
+                           a.shape)),
+                to_csr(COO(plan.b_pattern.row, plan.b_pattern.col, b_vals,
+                           b.shape)),
+            )
+            assert np.array_equal(c.todense(), ref.todense())
+        # Acceptance: re-execution did zero schedule-construction work.
+        assert schedule_build_count() == builds_after_plan
+        assert plan.report.schedule_builds == 1
+        assert plan.report.executes == 2
+
+    def test_cache_returns_identical_plan_object(self):
+        a = _int_coo(64, 48, 0.1, 21)
+        b = _int_coo(48, 64, 0.1, 22)
+        cache = PlanCache()
+        p1 = spgemm_plan(a, b, tile=16, group=2, backend="jnp", cache=cache)
+        # Pattern-equal input with different values: same plan object.
+        a2 = COO(a.row, a.col, a.val * 2.0, a.shape)
+        p2 = spgemm_plan(a2, b, tile=16, group=2, backend="jnp", cache=cache)
+        assert p2 is p1
+        assert cache.stats.hits == 1 and cache.stats.misses == 1
+        assert p1.report.cache_hits == 1
+        # The hit rebinds the caller's values: execute() uses a2's values.
+        c = p2.execute()
+        ref = spgemm_gustavson(to_csr(a2), to_csr(b))
+        assert np.array_equal(c.todense(), ref.todense())
+
+    def test_cache_misses_on_different_pattern_or_params(self):
+        a = _int_coo(64, 48, 0.1, 31)
+        b = _int_coo(48, 64, 0.1, 32)
+        cache = PlanCache()
+        p1 = spgemm_plan(a, b, tile=16, group=2, backend="jnp", cache=cache)
+        p2 = spgemm_plan(a, b, tile=8, group=2, backend="jnp", cache=cache)
+        p3 = spgemm_plan(a, b, tile=16, group=4, backend="jnp", cache=cache)
+        assert p1 is not p2 and p1 is not p3 and p2 is not p3
+        assert cache.stats.misses == 3 and cache.stats.hits == 0
+
+    def test_concurrent_executes_on_shared_plan(self):
+        """Cached plans are shared objects: concurrent executes with
+        different value sets must each return their own C (no torn
+        A/B pairs, no aliased staging buffers)."""
+        a = _int_coo(40, 30, 0.12, 81)
+        b = _int_coo(30, 40, 0.12, 82)
+        plan = spgemm_plan(a, b, tile=8, group=2, backend="jnp",
+                           cache=PlanCache())
+        mismatches = []
+
+        def worker(seed):
+            rng = np.random.default_rng(seed)
+            av = rng.integers(-3, 4, a.nnz).astype(np.float32)
+            bv = rng.integers(-3, 4, b.nnz).astype(np.float32)
+            c = plan.execute(av, bv)
+            ref = spgemm_gustavson(
+                to_csr(COO(plan.a_pattern.row, plan.a_pattern.col, av,
+                           a.shape)),
+                to_csr(COO(plan.b_pattern.row, plan.b_pattern.col, bv,
+                           b.shape)),
+            )
+            if not np.array_equal(c.todense(), ref.todense()):
+                mismatches.append(seed)
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not mismatches
+        assert plan.report.executes == 8
+
+    def test_value_stream_iter_does_not_leak_producer(self):
+        """Dropping a prefetching iterator must stop its producer thread
+        even when the producer is blocked on a full queue."""
+        a = _int_coo(20, 20, 0.1, 91)
+        b = _int_coo(20, 20, 0.1, 92)
+        stream = SpGEMMValueStream(a, b, seed=0)
+        before = set(threading.enumerate())
+        it = stream.iter(prefetch=1)
+        assert set(next(it)) == {"a_vals", "b_vals"}
+        producers = [t for t in threading.enumerate() if t not in before]
+        assert producers, "expected a producer thread"
+        it.close()
+        for t in producers:
+            t.join(timeout=2.0)
+            assert not t.is_alive(), "producer thread leaked"
+
+    def test_shim_does_not_break_direct_plan_holders(self):
+        """ops.spgemm releases device copies of the shared cached plan,
+        but a direct spgemm_plan holder's no-arg execute() must keep
+        working (host values stay staged)."""
+        ad = random_block_sparse(96, 96, (32, 32), 0.5, seed=101)
+        bd = random_block_sparse(96, 96, (32, 32), 0.5, seed=102)
+        a, b = to_bcsv(ad, (32, 32), 2), to_bcsr(bd, (32, 32))
+        p = spgemm_plan(a, b, backend="jnp")  # default (shared) cache
+        ops.spgemm(a, b, backend="jnp")
+        c = p.execute()  # restages from host on demand
+        np.testing.assert_allclose(
+            c.todense(), ad.astype(np.float64) @ bd.astype(np.float64),
+            rtol=1e-4, atol=1e-4)
+
+    def test_ops_spgemm_shim_uses_cache_and_fresh_values(self):
+        ad = random_block_sparse(128, 128, (32, 32), 0.4, seed=41)
+        bd = random_block_sparse(128, 128, (32, 32), 0.4, seed=42)
+        c1 = ops.spgemm(to_bcsv(ad, (32, 32), 2), to_bcsr(bd, (32, 32)),
+                        backend="pallas_interpret")
+        np.testing.assert_allclose(
+            c1.todense(), ad.astype(np.float64) @ bd.astype(np.float64),
+            rtol=1e-4, atol=1e-4)
+        # Same pattern, new values — must NOT serve stale numerics.
+        ad2 = (ad * 3.0).astype(np.float32)
+        c2 = ops.spgemm(to_bcsv(ad2, (32, 32), 2), to_bcsr(bd, (32, 32)),
+                        backend="pallas_interpret")
+        np.testing.assert_allclose(
+            c2.todense(), ad2.astype(np.float64) @ bd.astype(np.float64),
+            rtol=1e-4, atol=1e-4)
+
+
+class TestSparseNativeConversion:
+    def test_matches_dense_path(self):
+        rng = np.random.default_rng(7)
+        for _ in range(5):
+            m, n = rng.integers(10, 100, 2)
+            bm, bn = rng.choice([4, 8, 16], 2)
+            g = int(rng.integers(1, 4))
+            d = rng.standard_normal((m, n)).astype(np.float32)
+            d[rng.random((m, n)) >= 0.1] = 0.0
+            ref_r = BCSR.fromdense(pad_to_blocks(d, (bm, bn)), (bm, bn))
+            got_r = to_bcsr(d, (bm, bn))
+            assert np.array_equal(got_r.indptr, ref_r.indptr)
+            assert np.array_equal(got_r.indices, ref_r.indices)
+            assert np.array_equal(got_r.blocks, ref_r.blocks)
+            ref_v = BCSV.fromdense(pad_to_blocks(d, (bm, bn)), (bm, bn), g)
+            got_v = to_bcsv(d, (bm, bn), g)
+            got_v.validate()
+            assert np.array_equal(got_v.brow, ref_v.brow)
+            assert np.array_equal(got_v.bcol, ref_v.bcol)
+            assert np.array_equal(got_v.group_ptr, ref_v.group_ptr)
+            assert np.array_equal(got_v.blocks, ref_v.blocks)
+
+    def test_scatter_rebinds_values(self):
+        coo = _int_coo(60, 44, 0.1, 51)
+        fmt, scatter = bcsv_from_coo(coo, (8, 8), 2)
+        v2 = np.arange(coo.nnz, dtype=np.float32) + 1.0
+        fmt.blocks.reshape(-1)[scatter] = v2
+        want = np.zeros(fmt.shape, np.float32)
+        want[coo.row, coo.col] = v2
+        assert np.array_equal(fmt.todense(), want)
+
+    def test_large_sparse_never_densifies(self):
+        """50k x 50k with nnz ~= 100k: the old dense round-trip needed
+        ~10 GB; the sparse-native path must stay orders of magnitude
+        below that."""
+        n = 50_000
+        nnz = 100_000
+        rng = np.random.default_rng(0)
+        row = rng.integers(0, n, nnz).astype(np.int32)
+        col = rng.integers(0, n, nnz).astype(np.int32)
+        val = rng.standard_normal(nnz).astype(np.float32)
+        coo = COO(row, col, val, (n, n)).sum_duplicates()
+        tracemalloc.start()
+        bcsv = to_bcsv(coo, (8, 8), 4)
+        bcsr = to_bcsr(coo, (8, 8))
+        _, peak = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+        assert peak < 500 * 1024 * 1024, f"peak {peak / 1e6:.0f} MB"
+        assert bcsv.nnzb <= coo.nnz and bcsr.nnzb <= coo.nnz
+        # Spot-check structural fidelity without densifying.
+        back = bcsv.to_coo().sum_duplicates().sort_rowmajor()
+        assert back.nnz == coo.nnz
+        s = coo.sort_rowmajor()
+        assert np.array_equal(back.row, s.row)
+        assert np.array_equal(back.col, s.col)
+        np.testing.assert_array_equal(back.val, s.val)
+
+    def test_block_to_coo_roundtrip(self):
+        d = random_block_sparse(64, 96, (16, 16), 0.3, seed=61)
+        for fmt in (to_bcsr(d, (16, 16)), to_bcsv(d, (16, 16), 2)):
+            assert np.array_equal(fmt.to_coo().todense(), fmt.todense())
+
+
+class TestPlanReport:
+    def test_report_fields(self):
+        a = _int_coo(64, 64, 0.1, 71)
+        b = _int_coo(64, 64, 0.1, 72)
+        plan = spgemm_plan(a, b, tile=16, group=2, backend="jnp",
+                           cache=PlanCache())
+        rep = plan.report
+        assert rep.nnz_a == a.nnz and rep.nnz_b == b.nnz
+        assert rep.num_triples >= rep.b_fetches >= 1
+        assert 0.0 <= rep.block_omar < 100.0
+        assert rep.tile == (16, 16, 16) and rep.group == 2
+        assert rep.shape == (64, 64)
+        d = rep.as_dict()
+        assert d["pattern_key"] == rep.pattern_key
+        assert d["schedule_builds"] == 1
