@@ -3,10 +3,12 @@
 The paper's host pre-processing "only needs to be performed once"
 (Sec. 4.3). ``spgemm_plan`` is that statement as an API: ONE call runs the
 sparse-native format conversion (no dense round-trip), the symbolic
-block-Gustavson phase (C structure + static triple schedule), schedule
-padding, and device staging; every ``plan.execute(...)`` after that is
-numeric-only — the serving shape where one sparsity pattern meets a stream
-of fresh value sets.
+block-Gustavson phase (C structure + static triple schedule + the output
+assembly map), schedule padding, and device staging; every
+``plan.execute(...)`` after that is numeric-only — the serving shape where
+one sparsity pattern meets a stream of fresh value sets — and
+``plan.execute_batch(...)`` runs a whole stack of value sets in one
+vmapped device call.
 
     PYTHONPATH=src python examples/spgemm_pipeline.py
 """
@@ -65,6 +67,21 @@ for step in range(3):
     err = np.abs(c_step.todense() - ref_step.todense()).max()
     print(f"step {step}: C nnz={c_step.nnz}  max|err|={err:.2e}")
     assert err < 1e-2
+assert schedule_build_count() == builds_before + 1, "symbolic phase re-ran!"
+
+# --- batched serving: vmap over the device-resident numeric phase --------
+# The same value stream in batch mode; one execute_batch call runs the whole
+# batch (rebind + kernel + assembly) in a single vmapped device program.
+BATCH = 4
+stream_b = SpGEMMValueStream(plan.a_pattern, plan.b_pattern, seed=7,
+                             batch=BATCH)
+av, bv = stream_b.values_batch_at(0)
+cs = plan.execute_batch(av, bv)
+for i, c_i in enumerate(cs):
+    c_one = plan.execute(av[i], bv[i])
+    err = np.abs(c_i.todense() - c_one.todense()).max()
+    assert err < 1e-3, f"batch element {i} diverged: {err:.2e}"
+print(f"execute_batch({BATCH}): all elements match single executes")
 assert schedule_build_count() == builds_before + 1, "symbolic phase re-ran!"
 
 # --- cache: pattern-equal request returns the identical plan -------------

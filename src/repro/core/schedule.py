@@ -19,6 +19,15 @@ Triple ordering = the paper's schedule, lifted to tiles:
 Consecutive triples share ``b_slot`` exactly when the paper's buffering
 scheme would share a fetched B row, and every C panel is visited in one
 contiguous run (safe Pallas output revisiting).
+
+The symbolic phase also precomputes C's *output-scatter structure*
+(:class:`AssemblyMap`, built by :func:`build_assembly_map`): the CSR pattern
+of C at element granularity plus a flat gather map from the kernel's output
+panels into packed CSR value order. With it, the numeric phase needs no
+data-dependent ``nonzero`` scan — assembly is one static device gather
+(Nagasaka et al. 2018: the symbolic phase can precompute all output
+accumulation structure, leaving the numeric phase pure
+gather-multiply-scatter).
 """
 from __future__ import annotations
 
@@ -29,7 +38,12 @@ import numpy as np
 
 from repro.sparse.formats import BCSR, BCSV
 
-__all__ = ["SpGEMMSchedule", "build_spgemm_schedule"]
+__all__ = [
+    "AssemblyMap",
+    "SpGEMMSchedule",
+    "build_assembly_map",
+    "build_spgemm_schedule",
+]
 
 
 @dataclasses.dataclass
@@ -166,4 +180,92 @@ def build_spgemm_schedule(a: BCSV, b: BCSR) -> SpGEMMSchedule:
         grid_m=grid_m,
         grid_n=grid_n,
         grid_k=grid_k,
+    )
+
+
+@dataclasses.dataclass
+class AssemblyMap:
+    """C's output-scatter structure, precomputed by the symbolic phase.
+
+    The numeric phase produces panels ``[n_panels, group*bm, bn]``; this map
+    turns them into CSR with one static gather —
+    ``data = panels.reshape(-1)[gather]`` — so assembly is value-independent
+    and jittable (no ``nonzero`` scan). The CSR pattern is *structural*:
+    every element of every structurally nonzero C block (trimmed to the true
+    ``shape``) is stored, including elements that compute to exact zero.
+    """
+
+    gather: np.ndarray  # [nnz] flat indices into panels.reshape(-1)
+    indptr: np.ndarray  # [m + 1] int64 CSR row pointers
+    indices: np.ndarray  # [nnz] int32 CSR column ids
+    shape: Tuple[int, int]  # true (untrimmed-by-padding) C shape
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    def nbytes(self) -> int:
+        return self.gather.nbytes + self.indptr.nbytes + self.indices.nbytes
+
+
+def build_assembly_map(
+    schedule: SpGEMMSchedule,
+    block_shape: Tuple[int, int],
+    out_shape: Tuple[int, int],
+) -> AssemblyMap:
+    """Map kernel output panels to C's CSR, symbolically.
+
+    ``block_shape`` is C's block shape ``(bm, bn)``; ``out_shape`` the true
+    ``(m, n)`` (block grids are ceil-padded, so edge blocks may overhang —
+    overhanging elements are structurally zero and dropped here, at plan
+    time).
+    """
+    bm, bn = block_shape
+    m, n = out_shape
+    nb = schedule.nnzb_c
+    if nb == 0 or bm == 0 or bn == 0:
+        return AssemblyMap(
+            np.zeros(0, np.int32), np.zeros(m + 1, np.int64),
+            np.zeros(0, np.int32), (m, n),
+        )
+    g = schedule.group
+    # Panel of each C block. Panels are emitted in ascending (group, bcol)
+    # order by build_spgemm_schedule, so a searchsorted on the combined key
+    # recovers the panel id; every C block has a panel by construction.
+    pkey = schedule.panel_group.astype(np.int64) * schedule.grid_n \
+        + schedule.panel_bcol
+    cgrp = schedule.c_brow.astype(np.int64) // g
+    ckey = cgrp * schedule.grid_n + schedule.c_bcol
+    p_of = np.minimum(np.searchsorted(pkey, ckey), pkey.shape[0] - 1)
+    if not np.array_equal(pkey[p_of], ckey):
+        raise AssertionError("C block without a matching output panel")
+    sub = schedule.c_brow.astype(np.int64) - cgrp * g
+    # Per-block element coordinates and their flat panel offsets.
+    rr = np.arange(bm, dtype=np.int64)[None, :, None]  # [1, bm, 1]
+    cc = np.arange(bn, dtype=np.int64)[None, None, :]  # [1, 1, bn]
+    rows = schedule.c_brow.astype(np.int64)[:, None, None] * bm + rr
+    cols = schedule.c_bcol.astype(np.int64)[:, None, None] * bn + cc
+    gather = (
+        p_of[:, None, None] * (g * bm * bn)
+        + (sub[:, None, None] * bm + rr) * bn
+        + cc
+    )
+    shape3 = (nb, bm, bn)
+    rows = np.broadcast_to(rows, shape3).reshape(-1)
+    cols = np.broadcast_to(cols, shape3).reshape(-1)
+    gather = gather.reshape(-1)
+    keep = (rows < m) & (cols < n)
+    if not keep.all():
+        rows, cols, gather = rows[keep], cols[keep], gather[keep]
+    # CSR order: row-major. Within one block-row, blocks are already
+    # bcol-ascending, but one output row spans several blocks, so sort.
+    order = np.lexsort((cols, rows))
+    rows, cols, gather = rows[order], cols[order], gather[order]
+    indptr = np.zeros(m + 1, np.int64)
+    np.cumsum(np.bincount(rows, minlength=m), out=indptr[1:])
+    flat_panels = schedule.n_panels * g * bm * bn
+    gdtype = np.int32 if flat_panels <= np.iinfo(np.int32).max else np.int64
+    return AssemblyMap(
+        gather.astype(gdtype, copy=False), indptr,
+        cols.astype(np.int32), (m, n),
     )

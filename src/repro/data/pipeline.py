@@ -155,6 +155,12 @@ class SpGEMMValueStream:
     ``integer_values=True`` draws small integers (exact in float32 under
     any accumulation order) so results can be compared bit-for-bit against
     the ``spgemm_gustavson`` oracle.
+
+    ``batch`` switches the stream to batch mode — the input side of
+    ``SpGEMMPlan.execute_batch``: ``values_batch_at(step)`` stacks ``batch``
+    consecutive single-step value sets into ``[batch, nnz]`` arrays, with
+    element ``i`` of batch-step ``s`` equal to ``values_at(s * batch + i)``,
+    so batched serving consumes exactly the single-stream sequence.
     """
 
     def __init__(
@@ -163,15 +169,19 @@ class SpGEMMValueStream:
         b_pattern: COO,
         seed: int = 0,
         integer_values: bool = False,
+        batch: Optional[int] = None,
     ):
         if a_pattern.shape[1] != b_pattern.shape[0]:
             raise ValueError(
                 f"inner dims mismatch: {a_pattern.shape} x {b_pattern.shape}"
             )
+        if batch is not None and batch < 1:
+            raise ValueError(f"batch must be >= 1, got {batch}")
         self.a_pattern = a_pattern
         self.b_pattern = b_pattern
         self.seed = seed
         self.integer_values = integer_values
+        self.batch = batch
 
     def _vals(self, rng: np.random.Generator, nnz: int) -> np.ndarray:
         if self.integer_values:
@@ -188,8 +198,29 @@ class SpGEMMValueStream:
             self._vals(rng, self.b_pattern.nnz),
         )
 
+    def values_batch_at(self, step: int, batch: Optional[int] = None):
+        """Stacked ``(a_vals[batch, nnz_a], b_vals[batch, nnz_b])`` for
+        batch-step ``step`` — row ``i`` is ``values_at(step * batch + i)``.
+
+        ``batch`` overrides the stream's constructed batch size."""
+        b = self.batch if batch is None else batch
+        if b is None:
+            raise ValueError(
+                "no batch size: construct with batch=... or pass batch"
+            )
+        a_out = np.empty((b, self.a_pattern.nnz), np.float32)
+        b_out = np.empty((b, self.b_pattern.nnz), np.float32)
+        for i in range(b):
+            a_out[i], b_out[i] = self.values_at(step * b + i)
+        return a_out, b_out
+
     def batch_at(self, step: int) -> Dict[str, np.ndarray]:
-        a_vals, b_vals = self.values_at(step)
+        """Single-step value dict, or stacked ``[batch, nnz]`` arrays when
+        the stream was constructed in batch mode."""
+        if self.batch is not None:
+            a_vals, b_vals = self.values_batch_at(step)
+        else:
+            a_vals, b_vals = self.values_at(step)
         return {"a_vals": a_vals, "b_vals": b_vals}
 
     def iter(self, start_step: int = 0, prefetch: int = 2) -> Iterator[Dict]:

@@ -34,7 +34,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams as _CompilerParams
 
-__all__ = ["spgemm_scheduled", "pad_schedule_arrays"]
+__all__ = ["spgemm_scheduled", "spgemm_scheduled_impl", "pad_schedule_arrays"]
 
 
 def _kernel(
@@ -101,11 +101,7 @@ def pad_schedule_arrays(
     )
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("n_panels", "group", "interpret"),
-)
-def spgemm_scheduled(
+def spgemm_scheduled_impl(
     a_blocks: jax.Array,  # [nnzb_a, bm, bk] packed BCSV blocks (stream order)
     b_blocks: jax.Array,  # [nnzb_b, bk, bn] packed BCSR blocks
     a_slot: jax.Array,  # [T] int32
@@ -118,9 +114,13 @@ def spgemm_scheduled(
     group: int,
     interpret: bool = True,
 ) -> jax.Array:
-    """Run the scheduled block-Gustavson SpGEMM.
+    """Unjitted body of :func:`spgemm_scheduled`.
 
-    Returns panels [n_panels, group*bm, bn] float32 (dummy panel stripped).
+    Exposed so callers that fuse further device work around the kernel
+    (``repro.spgemm.executor`` chains it with value rebind and output
+    assembly) can place the whole pipeline under one ``jax.jit`` without
+    nesting jits. Returns panels [n_panels, group*bm, bn] float32 (dummy
+    panel stripped).
     """
     t_pad = a_slot.shape[0]
     bm, bk = a_blocks.shape[1], a_blocks.shape[2]
@@ -146,3 +146,14 @@ def spgemm_scheduled(
         ),
     )(a_slot, b_slot, panel, sub_row, start, a_blocks, b_blocks)
     return out[:n_panels]
+
+
+spgemm_scheduled = jax.jit(
+    spgemm_scheduled_impl,
+    static_argnames=("n_panels", "group", "interpret"),
+)
+spgemm_scheduled.__doc__ = (
+    "Run the scheduled block-Gustavson SpGEMM (jitted entry point).\n\n"
+    "Returns panels [n_panels, group*bm, bn] float32 (dummy panel "
+    "stripped). See :func:`spgemm_scheduled_impl` for the unjitted body."
+)

@@ -57,6 +57,11 @@ def spgemm(
     its numeric phase with the given values. Callers that reuse one
     pattern should hold a plan directly (``repro.spgemm.spgemm_plan``)
     instead of round-tripping through here.
+
+    The returned CSR has C's *structural* pattern (every element of every
+    structurally nonzero C block): elements that compute to exact zero are
+    stored explicitly, so the pattern is value-independent — the contract
+    that keeps output assembly inside the plan's jitted executor.
     """
     if schedule is not None:
         # Caller already ran the symbolic phase; honor it without caching.

@@ -24,33 +24,37 @@ __all__ = [
 def spgemm_scheduled_ref(
     a_blocks: jax.Array,  # [nnzb_a, bm, bk]
     b_blocks: jax.Array,  # [nnzb_b, bk, bn]
-    a_slot: np.ndarray,  # [T]
-    b_slot: np.ndarray,  # [T]
-    panel: np.ndarray,  # [T]
-    sub_row: np.ndarray,  # [T]
+    a_slot: jax.Array,  # [T] (numpy or device array)
+    b_slot: jax.Array,  # [T]
+    panel: jax.Array,  # [T]
+    sub_row: jax.Array,  # [T]
     n_panels: int,
     group: int,
 ) -> jax.Array:
     """Execute the SpGEMM triple schedule densely: for each triple t,
     ``panels[panel[t], sub_row[t]*bm : ..., :] += A[a_slot[t]] @ B[b_slot[t]]``.
 
-    Returns panels [n_panels, group*bm, bn] in float32.
+    Pure jnp on traced arrays — safe to wrap in ``jax.jit`` and to ``vmap``
+    over the block operands with a constant schedule (the batched executor
+    path in ``repro.spgemm.executor``). Returns panels
+    [n_panels, group*bm, bn] in float32.
     """
-    bm, bk = a_blocks.shape[1], a_blocks.shape[2]
+    bm = a_blocks.shape[1]
     bn = b_blocks.shape[2]
-    panels = jnp.zeros((n_panels, group * bm, bn), jnp.float32)
     prod = jnp.einsum(
         "tij,tjk->tik",
-        a_blocks[a_slot].astype(jnp.float32),
-        b_blocks[b_slot].astype(jnp.float32),
+        a_blocks[jnp.asarray(a_slot)].astype(jnp.float32),
+        b_blocks[jnp.asarray(b_slot)].astype(jnp.float32),
     )  # [T, bm, bn]
-    # Scatter-add each product into its (panel, sub_row) slice.
-    t_panel = jnp.asarray(panel, jnp.int32)
-    t_row = jnp.asarray(sub_row, jnp.int32) * bm
-    panels = panels.at[t_panel[:, None, None],
-                       t_row[:, None, None] + jnp.arange(bm)[None, :, None],
-                       jnp.arange(bn)[None, None, :]].add(prod)
-    return panels
+    # Scatter-add each product at its flat panel-row offset: panels laid out
+    # as [n_panels * group * bm, bn], triple t starts at row
+    # panel[t]*group*bm + sub_row[t]*bm.
+    row0 = jnp.asarray(panel, jnp.int32) * (group * bm) \
+        + jnp.asarray(sub_row, jnp.int32) * bm
+    rows = row0[:, None] + jnp.arange(bm, dtype=jnp.int32)[None, :]  # [T, bm]
+    flat = jnp.zeros((n_panels * group * bm, bn), jnp.float32)
+    flat = flat.at[rows].add(prod)
+    return flat.reshape(n_panels, group * bm, bn)
 
 
 def bsr_spmm_ref(

@@ -55,11 +55,12 @@ def to_csv(a: Union[np.ndarray, AnySparse], num_pe: int) -> CSV:
 
 def _block_coords(
     coo: COO, block_shape: Tuple[int, int]
-) -> Tuple[np.ndarray, np.ndarray, np.ndarray, Tuple[int, int]]:
-    """Per-nonzero block ids for a *deduplicated* COO, plus the padded grid.
+) -> Tuple[np.ndarray, Tuple[int, int]]:
+    """Per-nonzero block keys for a *deduplicated* COO, plus the padded grid.
 
-    Returns ``(brow, bcol, bid, (gm, gk))`` where ``bid = brow * gk + bcol``
-    is a single sortable block key. The grid covers ceil-divided (padded)
+    Returns ``(bid, (gm, gk))`` where ``bid = brow * gk + bcol`` is a single
+    sortable block key (callers recover ``brow``/``bcol`` of the *unique*
+    blocks via ``divmod(bid, gk)``). The grid covers ceil-divided (padded)
     dims, so no dense padding is ever materialized.
     """
     bm, bk = block_shape
@@ -67,7 +68,7 @@ def _block_coords(
     gm, gk = -(-m // bm), -(-k // bk)
     brow = (coo.row // bm).astype(np.int64)
     bcol = (coo.col // bk).astype(np.int64)
-    return brow, bcol, brow * gk + bcol, (gm, gk)
+    return brow * gk + bcol, (gm, gk)
 
 
 def bcsr_from_coo(
@@ -82,7 +83,7 @@ def bcsr_from_coo(
     numeric-phase rebind used by SpGEMMPlan.execute.
     """
     bm, bk = block_shape
-    brow, bcol, bid, (gm, gk) = _block_coords(coo, block_shape)
+    bid, (gm, gk) = _block_coords(coo, block_shape)
     ub = np.unique(bid)  # ascending == (brow, bcol) block-row-major
     slot = np.searchsorted(ub, bid)
     scatter = slot * (bm * bk) + (coo.row % bm).astype(np.int64) * bk + (
@@ -109,7 +110,7 @@ def bcsv_from_coo(
     plus flat ``scatter`` indices out.
     """
     bm, bk = block_shape
-    brow, bcol, bid, (gm, gk) = _block_coords(coo, block_shape)
+    bid, (gm, gk) = _block_coords(coo, block_shape)
     ub = np.unique(bid)
     ubr, ubc = ub // gk, ub % gk
     # Vector-major order: (block-row group, bcol, brow).

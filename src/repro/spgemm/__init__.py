@@ -7,10 +7,16 @@ Typical use::
     plan = spgemm_plan(a, b, tile=64, group=4, backend="auto")
     c0 = plan.execute()                     # staged values
     c1 = plan.execute(a_vals2, b_vals2)     # fresh values, zero symbolic work
+    cs = plan.execute_batch(a_batch, b_batch)  # [batch, nnz] values, one
+                                               # vmapped device call
     print(plan.report.block_omar, plan.report.cache_hits)
 
-Plans are cached process-wide on ``(pattern hash, tile, group, backend)``;
-``repro.kernels.ops.spgemm`` is a thin compatibility shim over this package.
+The numeric phase is device-resident (``repro.spgemm.executor``): value
+rebind, the scheduled kernel, and output assembly run under one ``jax.jit``
+against the symbolic phase's precomputed CSR structure. Plans are cached
+process-wide on ``(pattern hash, tile, group, backend)`` with optional
+byte-budget eviction; ``repro.kernels.ops.spgemm`` is a thin compatibility
+shim over this package.
 """
 from repro.spgemm.cache import (
     CacheStats,
@@ -18,6 +24,7 @@ from repro.spgemm.cache import (
     default_cache,
     pattern_digest,
 )
+from repro.spgemm.executor import SpGEMMExecutor
 from repro.spgemm.plan import (
     PlanReport,
     SpGEMMPlan,
@@ -30,6 +37,7 @@ __all__ = [
     "CacheStats",
     "PlanCache",
     "PlanReport",
+    "SpGEMMExecutor",
     "SpGEMMPlan",
     "default_cache",
     "pattern_digest",

@@ -13,7 +13,7 @@ import dataclasses
 import hashlib
 import threading
 from collections import OrderedDict
-from typing import Callable, Tuple
+from typing import Callable, Optional, Tuple
 
 import numpy as np
 
@@ -58,15 +58,43 @@ class PlanCache:
     Keys are ``(pattern_hash, tile, group, backend)`` tuples. ``get_or_build``
     returns ``(plan, hit)`` so callers can attribute the lookup in their
     reports.
+
+    Eviction is LRU under two caps: ``capacity`` (plan count) and, when set,
+    ``max_bytes`` — a budget on the host memory the cached plans retain
+    (each plan sized once at insert via its ``host_nbytes()``), so
+    large-operand one-shot workloads cannot pin unbounded host memory. The
+    most recently inserted plan is always kept, even when it alone exceeds
+    the byte budget.
     """
 
-    def __init__(self, capacity: int = 64):
+    def __init__(self, capacity: int = 64, max_bytes: Optional[int] = None):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
+        if max_bytes is not None and max_bytes < 1:
+            raise ValueError("max_bytes must be >= 1 (or None)")
         self.capacity = capacity
+        self.max_bytes = max_bytes
         self.stats = CacheStats()
         self._lock = threading.Lock()
         self._plans: OrderedDict = OrderedDict()
+        self._sizes: dict = {}
+        self._bytes = 0
+
+    @property
+    def total_bytes(self) -> int:
+        """Bytes currently charged against ``max_bytes`` (insert-time
+        sizes; a plan's later ``release_values()`` is not re-measured)."""
+        with self._lock:
+            return self._bytes
+
+    def _plan_size(self, plan) -> int:
+        size = getattr(plan, "host_nbytes", None)
+        return int(size()) if callable(size) else 0
+
+    def _pop_lru(self) -> None:
+        key, _ = self._plans.popitem(last=False)
+        self._bytes -= self._sizes.pop(key, 0)
+        self.stats.evictions += 1
 
     def get_or_build(self, key: Tuple, builder: Callable):
         with self._lock:
@@ -78,12 +106,19 @@ class PlanCache:
         # Build outside the lock (symbolic phase can be expensive); a rare
         # duplicate build under contention is benign — last writer wins.
         plan = builder()
+        size = self._plan_size(plan) if self.max_bytes is not None else 0
         with self._lock:
+            if key in self._plans:  # lost a build race: replace, re-charge
+                self._bytes -= self._sizes.pop(key, 0)
             self._plans[key] = plan
             self._plans.move_to_end(key)
+            self._sizes[key] = size
+            self._bytes += size
             while len(self._plans) > self.capacity:
-                self._plans.popitem(last=False)
-                self.stats.evictions += 1
+                self._pop_lru()
+            if self.max_bytes is not None:
+                while self._bytes > self.max_bytes and len(self._plans) > 1:
+                    self._pop_lru()
         return plan, False
 
     def __len__(self) -> int:
@@ -97,6 +132,8 @@ class PlanCache:
     def clear(self) -> None:
         with self._lock:
             self._plans.clear()
+            self._sizes.clear()
+            self._bytes = 0
             self.stats = CacheStats()
 
 

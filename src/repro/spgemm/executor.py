@@ -1,0 +1,286 @@
+"""Device-resident SpGEMM numeric executor.
+
+FSpGEMM's throughput claim (PAPER Sec. 4) rests on the numeric phase being a
+pure streaming pipeline once host pre-processing is done. This module is
+that pipeline as a *functional core*: a pure, jittable function
+
+    (packed A blocks, packed B blocks) -> packed C values
+
+chaining three device-side stages under one ``jax.jit``:
+
+1. **value rebind** (optional, element plans): scatter fresh ``[nnz]`` value
+   vectors into the packed block arrays at the plan's precomputed scatter
+   indices;
+2. **the scheduled kernel**: the Pallas block-Gustavson kernel
+   (:func:`repro.kernels.gustavson_spgemm.spgemm_scheduled_impl`) or the
+   pure-jnp path (:func:`repro.kernels.ref.spgemm_scheduled_ref`);
+3. **output assembly**: one static gather through the symbolic phase's
+   :class:`~repro.core.schedule.AssemblyMap` — no data-dependent ``nonzero``,
+   no per-panel host loop.
+
+Because every stage is shape-static, the core batches over a leading value
+axis (:func:`numeric_core_batch`, the engine behind
+``SpGEMMPlan.execute_batch``): semantically ``jax.vmap`` of the core,
+lowered by folding the batch into the triple schedule so XLA sees the same
+op shapes as the single-set path. The jitted entry points are module-level
+with static config arguments, so plans sharing shapes share executables;
+:class:`SpGEMMExecutor` wraps them with a plan's device-resident constants
+(schedule arrays, scatter indices, gather map — shipped to device once).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.schedule import AssemblyMap, SpGEMMSchedule
+from repro.kernels import ref
+from repro.kernels.gustavson_spgemm import (
+    pad_schedule_arrays,
+    spgemm_scheduled_impl,
+)
+
+__all__ = ["SpGEMMExecutor", "numeric_core", "numeric_core_batch"]
+
+_STATICS = ("n_panels", "group", "backend", "interpret")
+
+
+def _run_schedule(
+    a_blocks, b_blocks, sched, *, n_panels, group, backend, interpret
+):
+    """Dispatch the scheduled kernel. ``sched`` is the backend's device
+    tuple: (a_slot, b_slot, panel, sub_row, start) padded for pallas,
+    (a_slot, b_slot, panel, sub_row) raw for jnp."""
+    if backend in ("pallas", "pallas_interpret"):
+        a_slot, b_slot, panel, sub_row, start = sched
+        return spgemm_scheduled_impl(
+            a_blocks, b_blocks, a_slot, b_slot, panel, sub_row, start,
+            n_panels=n_panels, group=group, interpret=interpret,
+        )
+    a_slot, b_slot, panel, sub_row = sched
+    return ref.spgemm_scheduled_ref(
+        a_blocks, b_blocks, a_slot, b_slot, panel, sub_row, n_panels, group
+    )
+
+
+def _invert_scatter(scatter: np.ndarray, size: int) -> np.ndarray:
+    """Turn flat scatter indices (``blocks.flat[scatter] = vals``) into a
+    gather map (``blocks.flat = vals_padded[inv]``), with index ``nnz``
+    pointing at a zero pad slot. XLA lowers gathers far better than
+    scatters on CPU, and the inverse is value-independent — computed once
+    at executor build."""
+    inv = np.full(size, scatter.shape[0], np.int32)
+    inv[scatter] = np.arange(scatter.shape[0], dtype=np.int32)
+    return inv
+
+
+def _bind(vals, inv, shape):
+    """Device-side value rebind as one gather through the precomputed
+    scatter inverse. Positions outside the pattern read the zero pad."""
+    pad = jnp.concatenate([vals, jnp.zeros(1, vals.dtype)])
+    return pad[inv].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=_STATICS)
+def numeric_core(
+    a_blocks, b_blocks, sched, gather, *, n_panels, group, backend, interpret
+):
+    """Functional numeric phase: packed blocks -> packed C values."""
+    panels = _run_schedule(
+        a_blocks, b_blocks, sched,
+        n_panels=n_panels, group=group, backend=backend, interpret=interpret,
+    )
+    return panels.reshape(-1)[gather]
+
+
+@functools.partial(
+    jax.jit, static_argnames=_STATICS + ("a_shape", "b_shape")
+)
+def numeric_core_values(
+    a_vals, b_vals, a_inv, b_inv, sched, gather, *,
+    a_shape, b_shape, n_panels, group, backend, interpret,
+):
+    """Numeric phase from [nnz] value vectors: rebind + kernel + assembly."""
+    a_blocks = _bind(a_vals, a_inv, a_shape)
+    b_blocks = _bind(b_vals, b_inv, b_shape)
+    return numeric_core(
+        a_blocks, b_blocks, sched, gather,
+        n_panels=n_panels, group=group, backend=backend, interpret=interpret,
+    )
+
+
+def _bind_batch(vals, inv, shape):
+    """Batched value rebind: one gather per batch row through the shared
+    scatter inverse, stacked along the slot axis."""
+    bsz = vals.shape[0]
+    pad = jnp.concatenate([vals, jnp.zeros((bsz, 1), vals.dtype)], axis=1)
+    return pad[:, inv].reshape((bsz * shape[0],) + tuple(shape[1:]))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("a_shape", "b_shape", "rebind", "n_panels", "group"),
+)
+def numeric_core_batch(
+    a_vals, b_vals, a_inv, b_inv, sched, gather, *,
+    a_shape, b_shape, rebind, n_panels, group,
+):
+    """Batched numeric phase over a leading value axis.
+
+    Semantically ``jax.vmap`` of the functional core, lowered by *folding
+    the batch into the triple schedule*: the packed operands of all batch
+    elements are stacked along the slot axis and the slot/panel indices are
+    offset per element, so the batch executes as one ``batch * T``-triple
+    schedule over ``batch * n_panels`` panels. This keeps every op shape
+    identical to the single-set jnp path (one long sorted scatter instead
+    of a batched scatter, which XLA lowers poorly on CPU) and preserves
+    each element's accumulation order exactly — batch results are bitwise
+    equal to single jnp executes.
+
+    ``rebind=True`` takes [batch, nnz] value vectors (element plans);
+    ``rebind=False`` takes batched packed block arrays (block plans).
+    """
+    bsz = a_vals.shape[0]
+    if rebind:
+        a_blocks = _bind_batch(a_vals, a_inv, a_shape)
+        b_blocks = _bind_batch(b_vals, b_inv, b_shape)
+    else:
+        a_blocks = a_vals.reshape((bsz * a_shape[0],) + tuple(a_shape[1:]))
+        b_blocks = b_vals.reshape((bsz * b_shape[0],) + tuple(b_shape[1:]))
+    a_slot, b_slot, panel, sub_row = sched
+    off = jnp.arange(bsz, dtype=jnp.int32)[:, None]
+    a_slot_b = (off * a_shape[0] + a_slot[None, :]).reshape(-1)
+    b_slot_b = (off * b_shape[0] + b_slot[None, :]).reshape(-1)
+    panel_b = (off * n_panels + panel[None, :]).reshape(-1)
+    sub_row_b = jnp.tile(sub_row, bsz)
+    panels = ref.spgemm_scheduled_ref(
+        a_blocks, b_blocks, a_slot_b, b_slot_b, panel_b, sub_row_b,
+        bsz * n_panels, group,
+    )
+    return panels.reshape(bsz, -1)[:, gather]
+
+
+class SpGEMMExecutor:
+    """A plan's numeric phase with device-resident constants.
+
+    Stages the triple schedule, the scatter indices, and the assembly gather
+    map on device once; ``run``/``run_values``/``run_batch`` then call the
+    module-level jitted cores (shared executables across same-shaped plans)
+    with zero per-call host work beyond operand transfer.
+
+    ``run_batch`` always executes on the jnp (pure-XLA) kernel path: the
+    Pallas scalar-prefetch grid has no batching rule, and XLA batches the
+    einsum/scatter pipeline natively. Single-shot ``run``/``run_values``
+    honor the plan's backend.
+    """
+
+    def __init__(
+        self,
+        *,
+        schedule: SpGEMMSchedule,
+        assembly: AssemblyMap,
+        backend: str,
+        a_scatter: Optional[np.ndarray] = None,
+        b_scatter: Optional[np.ndarray] = None,
+        a_shape: Tuple[int, ...] = (),
+        b_shape: Tuple[int, ...] = (),
+    ):
+        self.backend = backend
+        self.n_panels = schedule.n_panels
+        self.group = schedule.group
+        self.a_shape = tuple(a_shape)
+        self.b_shape = tuple(b_shape)
+        self._interpret = (
+            backend == "pallas_interpret" or jax.default_backend() != "tpu"
+        )
+        # Per-set f32 rows the batched schedule touches (panel accumulator
+        # + einsum products) — the working-set basis for batch_chunk().
+        bm = a_shape[1] if len(a_shape) == 3 else 0
+        self._bn = b_shape[2] if len(b_shape) == 3 else 0
+        self._per_set_rows = (
+            schedule.n_panels * schedule.group + schedule.num_triples
+        ) * bm
+        self._gather = jnp.asarray(assembly.gather)
+        # The jnp schedule tuple is kept for every backend: it is the batch
+        # path's kernel even on pallas plans.
+        self._sched_jnp = tuple(
+            jnp.asarray(x) for x in (
+                schedule.a_slot, schedule.b_slot, schedule.panel,
+                schedule.sub_row,
+            )
+        )
+        if backend in ("pallas", "pallas_interpret"):
+            a_slot, b_slot, panel, sub_row, start, _ = pad_schedule_arrays(
+                schedule.a_slot, schedule.b_slot, schedule.panel,
+                schedule.sub_row, schedule.start, schedule.n_panels,
+            )
+            self._sched = tuple(
+                jnp.asarray(x) for x in (a_slot, b_slot, panel, sub_row, start)
+            )
+        else:
+            self._sched = self._sched_jnp
+        # Rebind maps: scatter indices inverted to gather form at build.
+        self._a_inv = (
+            jnp.asarray(_invert_scatter(a_scatter, int(np.prod(a_shape))))
+            if a_scatter is not None else None
+        )
+        self._b_inv = (
+            jnp.asarray(_invert_scatter(b_scatter, int(np.prod(b_shape))))
+            if b_scatter is not None else None
+        )
+
+    @property
+    def can_rebind(self) -> bool:
+        return self._a_inv is not None and self._b_inv is not None
+
+    def batch_chunk(
+        self,
+        small_set_bytes: int = (5 << 20) // 4,
+        cache_bytes: int = 8 << 20,
+    ) -> int:
+        """Max batch elements per fused device call (empirical CPU policy).
+
+        Fusing pays only when one set's working bytes (panel accumulator +
+        einsum intermediates, ``4 * per_set_rows * bn``) are small: chunks
+        sized to keep ``chunk * per_set`` under ``cache_bytes`` then cut
+        per-set cost 1.3-1.7x by amortizing dispatch. Above
+        ``small_set_bytes`` per set, measured mid-size chunks *regress*
+        (the fused scatter's accumulator leaves cache, 2-3x per-set), so
+        larger problems run one set per call — matching a single
+        ``execute()`` minus its host rebind/staging work. Revisit for TPU:
+        the knee is a host-cache property (see ROADMAP).
+        """
+        per_set = 4 * self._per_set_rows * self._bn
+        if per_set <= small_set_bytes:
+            return max(1, cache_bytes // max(per_set, 1))
+        return 1
+
+    def run(self, a_blocks, b_blocks) -> jax.Array:
+        """Packed blocks -> packed C values (plan's backend)."""
+        return numeric_core(
+            a_blocks, b_blocks, self._sched, self._gather,
+            n_panels=self.n_panels, group=self.group, backend=self.backend,
+            interpret=self._interpret,
+        )
+
+    def run_values(self, a_vals, b_vals) -> jax.Array:
+        """[nnz] value vectors -> packed C values, rebind included."""
+        return numeric_core_values(
+            a_vals, b_vals, self._a_inv, self._b_inv,
+            self._sched, self._gather,
+            a_shape=self.a_shape, b_shape=self.b_shape,
+            n_panels=self.n_panels, group=self.group, backend=self.backend,
+            interpret=self._interpret,
+        )
+
+    def run_batch(self, a_vals, b_vals, *, rebind: bool) -> jax.Array:
+        """Batched values -> packed C values [batch, nnz_c] (jnp path)."""
+        return numeric_core_batch(
+            a_vals, b_vals, self._a_inv, self._b_inv,
+            self._sched_jnp, self._gather,
+            a_shape=self.a_shape, b_shape=self.b_shape, rebind=rebind,
+            n_panels=self.n_panels, group=self.group,
+        )

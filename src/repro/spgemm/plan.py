@@ -1,39 +1,57 @@
-"""Plan/execute SpGEMM: amortize the paper's host pre-processing.
+"""Plan/execute SpGEMM: symbolic phase once, device-resident numeric phase.
 
 FSpGEMM's host-side claim (Sec. 4.3) is that CSV pre-processing "only needs
 to be performed once". This module is that claim as an API, in the
 descriptor/setup-execute shape of cuSPARSE-style two-phase SpGEMM and the
-symbolic/numeric split of Nagasaka et al.:
+symbolic/numeric split of Nagasaka et al. — with the numeric phase a pure
+streaming pipeline, as on the paper's FPGA:
 
 * :func:`spgemm_plan` runs every amortizable step once — sparse-native
   format conversion (COO -> BCSV/BCSR with value-scatter indices), the
-  symbolic block-Gustavson phase (C structure + static triple schedule),
-  schedule padding, and device-array staging — and returns a
-  :class:`SpGEMMPlan`.
-* :meth:`SpGEMMPlan.execute` runs only the numeric phase: rebind fresh
-  values into the packed block arrays, launch the scheduled kernel,
-  assemble C sparsely. No symbolic work, no densification.
+  symbolic block-Gustavson phase (C structure + static triple schedule +
+  the :class:`~repro.core.schedule.AssemblyMap` output-scatter structure),
+  schedule padding, and device staging — and returns a :class:`SpGEMMPlan`.
+* The numeric phase is the *functional core* of
+  :class:`~repro.spgemm.executor.SpGEMMExecutor`: value rebind, the
+  scheduled kernel, and output assembly fused under one ``jax.jit``;
+  C's CSR pattern is precomputed, so assembly is a single static device
+  gather — no host ``nonzero`` scan, no per-panel Python loop.
+* :meth:`SpGEMMPlan.execute` is a thin stateful wrapper over that core: it
+  keeps the lock / host-value staging / copy-on-stage semantics (no-arg
+  ``execute()`` reuses staged values; plans are shared cache objects) and
+  wraps the packed C values in the precomputed CSR structure.
+* :meth:`SpGEMMPlan.execute_batch` vmaps the functional core over a leading
+  value-batch axis — the serving workload, fed by the batch mode of
+  :class:`repro.data.pipeline.SpGEMMValueStream`.
 * Plans are cached process-wide (``repro.spgemm.cache``) keyed on
-  ``(pattern hash, tile, group, backend)`` — the serving path where one
-  sparsity pattern meets millions of fresh value sets pays the symbolic
-  phase exactly once.
+  ``(pattern hash, tile, group, backend)``, with optional byte-budget
+  eviction — the serving path where one sparsity pattern meets millions of
+  fresh value sets pays the symbolic phase exactly once.
+
+Output convention: C's CSR pattern is *structural* (every element of every
+structurally nonzero C block, trimmed to the true shape), so values that
+compute to exact zero are stored explicitly — the pattern is
+value-independent, which is what makes assembly jittable and batchable.
 """
 from __future__ import annotations
 
-import dataclasses
 import threading
-from typing import Optional, Tuple, Union
+from typing import Callable, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.schedule import SpGEMMSchedule, build_spgemm_schedule
-from repro.kernels import ref
-from repro.kernels.gustavson_spgemm import pad_schedule_arrays, spgemm_scheduled
+from repro.core.schedule import (
+    AssemblyMap,
+    SpGEMMSchedule,
+    build_assembly_map,
+    build_spgemm_schedule,
+)
 from repro.sparse.convert import bcsr_from_coo, bcsv_from_coo, to_coo
 from repro.sparse.formats import BCSR, BCSV, COO, CSR
 from repro.spgemm.cache import PlanCache, default_cache, pattern_digest
+from repro.spgemm.executor import SpGEMMExecutor
 
 __all__ = [
     "PlanReport",
@@ -60,38 +78,97 @@ def resolve_backend(backend: str = "auto") -> str:
     return backend
 
 
-@dataclasses.dataclass
+_REPORT_FIELDS = (
+    "pattern_key", "tile", "group", "backend", "shape", "nnz_a", "nnz_b",
+    "nnzb_a", "nnzb_b", "nnzb_c", "num_triples", "n_panels", "b_fetches",
+    "block_omar", "schedule_builds", "cache_hits", "executes",
+)
+
+
 class PlanReport:
     """Structured statistics of one plan: what was built, what it costs,
-    and how often it has been reused."""
+    and how often it has been reused.
 
-    pattern_key: str
-    tile: Tuple[int, int, int]
-    group: int
-    backend: str
-    shape: Tuple[int, int]  # output C shape
-    nnz_a: int
-    nnz_b: int
-    nnzb_a: int
-    nnzb_b: int
-    nnzb_c: int
-    num_triples: int
-    n_panels: int
-    b_fetches: int
-    block_omar: float
-    # Lifecycle counters (mutable).
-    schedule_builds: int = 1  # symbolic-phase runs for this plan (0 when a
-    # pre-built schedule was supplied, else 1)
-    cache_hits: int = 0  # times this plan was served from a PlanCache
-    executes: int = 0  # numeric-phase runs
+    ``pattern_key``, ``nnz_a``, and ``nnz_b`` may be supplied as zero-arg
+    callables: they resolve (and memoize) on first access, so plan paths
+    whose report nobody reads — the uncached ``ops.spgemm(..., schedule=)``
+    shim — never pay the pattern digest or the ``count_nonzero`` scans.
+    """
+
+    def __init__(
+        self,
+        pattern_key: Union[str, Callable[[], str]],
+        tile: Tuple[int, int, int],
+        group: int,
+        backend: str,
+        shape: Tuple[int, int],  # output C shape
+        nnz_a: Union[int, Callable[[], int]],
+        nnz_b: Union[int, Callable[[], int]],
+        nnzb_a: int,
+        nnzb_b: int,
+        nnzb_c: int,
+        num_triples: int,
+        n_panels: int,
+        b_fetches: int,
+        block_omar: float,
+        schedule_builds: int = 1,  # symbolic-phase runs for this plan (0
+        # when a pre-built schedule was supplied, else 1)
+        cache_hits: int = 0,  # times this plan was served from a PlanCache
+        executes: int = 0,  # numeric-phase runs (value sets, for batches)
+    ):
+        self._pattern_key = pattern_key
+        self._nnz_a = nnz_a
+        self._nnz_b = nnz_b
+        self.tile = tuple(tile)
+        self.group = group
+        self.backend = backend
+        self.shape = tuple(shape)
+        self.nnzb_a = nnzb_a
+        self.nnzb_b = nnzb_b
+        self.nnzb_c = nnzb_c
+        self.num_triples = num_triples
+        self.n_panels = n_panels
+        self.b_fetches = b_fetches
+        self.block_omar = block_omar
+        self.schedule_builds = schedule_builds
+        self.cache_hits = cache_hits
+        self.executes = executes
+
+    @property
+    def pattern_key(self) -> str:
+        if callable(self._pattern_key):
+            self._pattern_key = self._pattern_key()
+        return self._pattern_key
+
+    @property
+    def nnz_a(self) -> int:
+        if callable(self._nnz_a):
+            self._nnz_a = self._nnz_a()
+        return self._nnz_a
+
+    @property
+    def nnz_b(self) -> int:
+        if callable(self._nnz_b):
+            self._nnz_b = self._nnz_b()
+        return self._nnz_b
 
     def as_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        return {f: getattr(self, f) for f in _REPORT_FIELDS}
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        lazies = ", ".join(
+            f for f, v in (("pattern_key", self._pattern_key),
+                           ("nnz_a", self._nnz_a), ("nnz_b", self._nnz_b))
+            if callable(v)
+        )
+        return (f"PlanReport(shape={self.shape}, triples={self.num_triples},"
+                f" executes={self.executes}"
+                + (f", unresolved=[{lazies}]" if lazies else "") + ")")
 
 
 class SpGEMMPlan:
     """A fully pre-processed SpGEMM: symbolic phase done, numeric phase
-    repeatable with fresh values.
+    repeatable — single-shot or batched — with fresh values.
 
     Build through :func:`spgemm_plan` (cached) or
     :meth:`SpGEMMPlan.from_blocks` (explicit). ``execute`` / ``__call__``
@@ -104,6 +181,11 @@ class SpGEMMPlan:
       ``[nnzb_a, bm, bk]`` block array, likewise ``b_vals``.
 
     Passing ``None`` reuses the values staged at build / last execute.
+    ``execute_batch`` takes the same per-set shapes with a leading batch
+    axis and runs the whole batch in one vmapped device call.
+
+    Results returned by one plan share the precomputed CSR ``indptr`` /
+    ``indices`` arrays (treat them as read-only).
     """
 
     def __init__(
@@ -139,19 +221,27 @@ class SpGEMMPlan:
         self._group = schedule.group
         self._bm = int(a_blocks.shape[1]) if a_blocks.ndim == 3 else 0
         self._bn = int(b_blocks.shape[2]) if b_blocks.ndim == 3 else 0
-        # Device staging: pad once, ship the schedule to device once. The
-        # jnp backend consumes the unpadded numpy schedule directly, so
-        # only the Pallas backends pay for this.
-        if schedule.num_triples and backend in ("pallas", "pallas_interpret"):
-            a_slot, b_slot, panel, sub_row, start, _ = pad_schedule_arrays(
-                schedule.a_slot, schedule.b_slot, schedule.panel,
-                schedule.sub_row, schedule.start, schedule.n_panels,
+        # Symbolic output structure: C's CSR pattern + the panels->CSR
+        # gather map. Computed here (plan build), consumed on device by the
+        # executor — the numeric phase never scans values for structure.
+        self.assembly: AssemblyMap = build_assembly_map(
+            schedule, (self._bm, self._bn), out_shape
+        )
+        # Device-resident numeric executor: schedule + scatter + gather
+        # staged to device once; runs the fused rebind/kernel/assembly jit.
+        self._executor: Optional[SpGEMMExecutor] = (
+            SpGEMMExecutor(
+                schedule=schedule,
+                assembly=self.assembly,
+                backend=backend,
+                a_scatter=a_scatter,
+                b_scatter=b_scatter,
+                a_shape=self._a_shape,
+                b_shape=self._b_shape,
             )
-            self._dev_schedule = tuple(
-                jnp.asarray(x) for x in (a_slot, b_slot, panel, sub_row, start)
-            )
-        else:
-            self._dev_schedule = None
+            if schedule.num_triples and self.assembly.nnz
+            else None
+        )
         # Device block values are staged lazily (first execute) so building
         # a plan never pays H2D for values that are immediately rebound.
         self._a_dev = None
@@ -177,7 +267,12 @@ class SpGEMMPlan:
         """Plan from pre-converted block formats (the ops.spgemm shim path).
 
         When ``schedule`` is supplied the symbolic phase is skipped entirely
-        (and not counted as a build).
+        (and not counted as a build). Report identity/population fields
+        (pattern digest, element nnz counts) are lazy — computed only if
+        the report is actually read. The thunks pin no operand-sized
+        memory: the digest closes over the (small) index arrays only, and
+        the nnz counts read the plan's *currently staged* blocks (so they
+        raise if resolved after ``release_values``).
         """
         global _SCHEDULE_BUILDS
         backend = resolve_backend(backend)
@@ -187,16 +282,22 @@ class SpGEMMPlan:
             _SCHEDULE_BUILDS += 1
             built = 1
         if not pattern_key:
-            pattern_key = _block_pattern_key(a, b)
+            idx = (a.brow, a.bcol, a.group_ptr, b.indptr, b.indices)
+            meta = ("blocks", a.shape, b.shape, a.block_shape,
+                    b.block_shape, a.group, str(a.blocks.dtype),
+                    str(b.blocks.dtype))
+
+            def pattern_key(idx=idx, meta=meta):
+                return pattern_digest(*idx, meta=meta)
         report = _make_report(
             pattern_key,
             (a.block_shape[0], a.block_shape[1], b.block_shape[1]),
             a.group, backend, (a.shape[0], b.shape[1]),
-            int(np.count_nonzero(a.blocks)), int(np.count_nonzero(b.blocks)),
+            0, 0,  # placeholders; bound to staged blocks below
             a.nnzb, b.nnzb, schedule,
         )
         report.schedule_builds = built
-        return cls(
+        plan = cls(
             schedule=schedule,
             a_blocks=a.blocks,
             b_blocks=b.blocks,
@@ -204,6 +305,9 @@ class SpGEMMPlan:
             out_shape=(a.shape[0], b.shape[1]),
             report=report,
         )
+        report._nnz_a = _staged_nnz(plan, "_a_blocks", "nnz_a")
+        report._nnz_b = _staged_nnz(plan, "_b_blocks", "nnz_b")
+        return plan
 
     # -- numeric phase ----------------------------------------------------
 
@@ -237,20 +341,38 @@ class SpGEMMPlan:
             )
         return vals
 
+    def _empty_csr(self) -> CSR:
+        return CSR(
+            np.zeros(self._m + 1, np.int64), np.zeros(0, np.int32),
+            np.zeros(0, np.float32), (self._m, self._n),
+        )
+
+    def _wrap_packed(self, packed: np.ndarray) -> CSR:
+        """Packed C values (assembly order) -> CSR on the precomputed
+        structure. indptr/indices are shared across this plan's results."""
+        asm = self.assembly
+        return CSR(asm.indptr, asm.indices, packed, (self._m, self._n))
+
     def execute(self, a_vals=None, b_vals=None) -> CSR:
         """Numeric phase only: C = A @ B for fresh values on the planned
-        pattern. Performs zero schedule-construction work."""
+        pattern. Zero schedule-construction work; the whole phase (kernel +
+        output assembly) runs inside the executor's jit."""
         with self._lock:
+            # report.nnz_* is read only on the scatter (element-plan) path:
+            # block plans keep their lazy count_nonzero report fields
+            # unresolved through executes.
             if a_vals is not None:
                 self._a_blocks = self._rebind(
                     a_vals, self._a_blocks, self._a_scatter,
-                    self.report.nnz_a, "a_vals", self._a_shape, self._a_dtype,
+                    self.report.nnz_a if self._a_scatter is not None else 0,
+                    "a_vals", self._a_shape, self._a_dtype,
                 )
                 self._a_dev = None
             if b_vals is not None:
                 self._b_blocks = self._rebind(
                     b_vals, self._b_blocks, self._b_scatter,
-                    self.report.nnz_b, "b_vals", self._b_shape, self._b_dtype,
+                    self.report.nnz_b if self._b_scatter is not None else 0,
+                    "b_vals", self._b_shape, self._b_dtype,
                 )
                 self._b_dev = None
             if self._a_blocks is None or self._b_blocks is None:
@@ -258,43 +380,100 @@ class SpGEMMPlan:
                     "plan values were released (release_values); pass "
                     "a_vals/b_vals to execute"
                 )
-            # copy=True: on CPU backends jnp.asarray may alias the numpy
-            # scratch buffer, and a later rebind would mutate an earlier
-            # caller's staged values mid-flight.
-            if self._a_dev is None:
-                self._a_dev = jnp.array(self._a_blocks, copy=True)
-            if self._b_dev is None:
-                self._b_dev = jnp.array(self._b_blocks, copy=True)
-            # Snapshot under the lock so a concurrent rebind on this shared
-            # plan cannot mix one caller's A with another's B.
-            a_dev, b_dev = self._a_dev, self._b_dev
+            # Element plans called with both value vectors take the fully
+            # fused device path (rebind + kernel + assembly in one jit):
+            # only [nnz] vectors cross to device, not full packed blocks.
+            # The host rebind above still ran, so no-arg execute() stays
+            # current; device block staging is left to the next such call.
+            fused_values = (
+                a_vals is not None and b_vals is not None
+                and self._a_scatter is not None
+                and self._b_scatter is not None
+            )
+            if fused_values:
+                a_send = np.asarray(a_vals, dtype=self._a_dtype)
+                b_send = np.asarray(b_vals, dtype=self._b_dtype)
+            else:
+                # copy=True: on CPU backends jnp.asarray may alias the
+                # numpy scratch buffer, and a later rebind would mutate an
+                # earlier caller's staged values mid-flight.
+                if self._a_dev is None:
+                    self._a_dev = jnp.array(self._a_blocks, copy=True)
+                if self._b_dev is None:
+                    self._b_dev = jnp.array(self._b_blocks, copy=True)
+                # Snapshot under the lock so a concurrent rebind on this
+                # shared plan cannot mix one caller's A with another's B.
+                a_dev, b_dev = self._a_dev, self._b_dev
             self.report.executes += 1
 
-        sch = self.schedule
-        if sch.num_triples == 0:
-            return CSR(
-                np.zeros(self._m + 1, np.int64), np.zeros(0, np.int32),
-                np.zeros(0, np.float32), (self._m, self._n),
-            )
-        if self.backend in ("pallas", "pallas_interpret"):
-            a_slot, b_slot, panel, sub_row, start = self._dev_schedule
-            panels = spgemm_scheduled(
-                a_dev, b_dev,
-                a_slot, b_slot, panel, sub_row, start,
-                n_panels=sch.n_panels,
-                group=self._group,
-                interpret=(self.backend == "pallas_interpret"
-                           or jax.default_backend() != "tpu"),
-            )
+        if self._executor is None:
+            return self._empty_csr()
+        if fused_values:
+            packed = self._executor.run_values(a_send, b_send)
         else:
-            panels = ref.spgemm_scheduled_ref(
-                a_dev, b_dev,
-                sch.a_slot, sch.b_slot, sch.panel, sch.sub_row,
-                sch.n_panels, self._group,
-            )
-        return self._assemble(np.asarray(panels))
+            packed = self._executor.run(a_dev, b_dev)
+        return self._wrap_packed(np.asarray(packed))
 
     __call__ = execute
+
+    def execute_batch(self, a_vals, b_vals) -> list:
+        """Batched numeric phase: one vmapped device call over a leading
+        value-batch axis (the serving workload).
+
+        ``a_vals`` is ``[batch, nnz_a]`` for element plans or
+        ``[batch, nnzb_a, bm, bk]`` packed blocks for block plans
+        (``b_vals`` likewise). Returns a list of ``batch`` CSR results that
+        share this plan's precomputed ``indptr``/``indices``.
+
+        Stateless with respect to the plan's staged values: it never touches
+        the buffers no-arg ``execute()`` reuses, so it is safe to interleave
+        with single executes and works after ``release_values()``. The
+        batch runs on the jnp (pure-XLA) kernel path for every backend.
+        """
+        a_vals = np.asarray(a_vals)
+        b_vals = np.asarray(b_vals)
+        rebind = self._a_scatter is not None and self._b_scatter is not None
+        if rebind:
+            want_a = (self.report.nnz_a,)
+            want_b = (self.report.nnz_b,)
+        else:
+            want_a, want_b = self._a_shape, self._b_shape
+        if a_vals.ndim != len(want_a) + 1 or a_vals.shape[1:] != want_a:
+            raise ValueError(
+                f"a_vals: expected [batch, {', '.join(map(str, want_a))}], "
+                f"got shape {a_vals.shape}"
+            )
+        if b_vals.shape[1:] != want_b or b_vals.shape[0] != a_vals.shape[0]:
+            raise ValueError(
+                f"b_vals: expected [{a_vals.shape[0]}, "
+                f"{', '.join(map(str, want_b))}], got shape {b_vals.shape}"
+            )
+        batch = int(a_vals.shape[0])
+        with self._lock:
+            self.report.executes += batch
+        if batch == 0:
+            return []
+        if self._executor is None:
+            return [self._empty_csr() for _ in range(batch)]
+        # Match execute()'s rebind semantics: values are cast to the plan's
+        # packed dtype.
+        a_vals = a_vals.astype(self._a_dtype, copy=False)
+        b_vals = b_vals.astype(self._b_dtype, copy=False)
+        # Oversized batches are split so the device accumulator working set
+        # stays cache-resident (see SpGEMMExecutor.batch_chunk); each chunk
+        # is still one fused device call.
+        chunk = min(batch, self._executor.batch_chunk())
+        out = []
+        for lo in range(0, batch, chunk):
+            hi = min(lo + chunk, batch)
+            packed = np.asarray(
+                self._executor.run_batch(
+                    jnp.asarray(a_vals[lo:hi]), jnp.asarray(b_vals[lo:hi]),
+                    rebind=rebind,
+                )
+            )
+            out.extend(self._wrap_packed(packed[i]) for i in range(hi - lo))
+        return out
 
     def release_device_values(self) -> None:
         """Drop only the staged device copies of the packed block values.
@@ -311,8 +490,9 @@ class SpGEMMPlan:
         Cached plans outlive individual calls; one-shot callers (the
         ``ops.spgemm`` shim) release values after executing so a warm
         cache pins only the pattern state (schedule, scatter indices,
-        coordinates) — not operand-sized value arrays. After release,
-        ``execute`` requires explicit ``a_vals``/``b_vals``.
+        assembly map) — not operand-sized value arrays. After release,
+        ``execute`` requires explicit ``a_vals``/``b_vals``
+        (``execute_batch`` is unaffected — it never reads staged values).
         """
         with self._lock:
             self._a_dev = None
@@ -320,34 +500,39 @@ class SpGEMMPlan:
             self._a_blocks = None
             self._b_blocks = None
 
-    def _assemble(self, panels: np.ndarray) -> CSR:
-        """Scatter output panels into CSR sparsely (no dense C)."""
+    def host_nbytes(self) -> int:
+        """Approximate bytes of host arrays this plan retains — the sizing
+        basis for :class:`~repro.spgemm.cache.PlanCache` byte budgets."""
         sch = self.schedule
-        rows_l, cols_l, vals_l = [], [], []
-        span = self._group * self._bm
-        for p in range(sch.n_panels):
-            g = int(sch.panel_group[p])
-            j = int(sch.panel_bcol[p])
-            r0 = g * span
-            sub = panels[p][: min(span, self._m - r0)]
-            rr, cc = np.nonzero(sub)
-            if rr.size == 0:
-                continue
-            rows_l.append(rr + r0)
-            cols_l.append(cc + j * self._bn)
-            vals_l.append(sub[rr, cc])
-        if not rows_l:
-            return CSR(
-                np.zeros(self._m + 1, np.int64), np.zeros(0, np.int32),
-                np.zeros(0, np.float32), (self._m, self._n),
-            )
-        coo = COO(
-            np.concatenate(rows_l).astype(np.int32),
-            np.concatenate(cols_l).astype(np.int32),
-            np.concatenate(vals_l),
-            (self._m, self._n),
+        arrays = [
+            sch.a_slot, sch.b_slot, sch.panel, sch.sub_row, sch.start,
+            sch.panel_group, sch.panel_bcol, sch.c_brow, sch.c_bcol,
+        ]
+        with self._lock:
+            arrays += [self._a_blocks, self._b_blocks]
+        arrays += [self._a_scatter, self._b_scatter]
+        for pat in (self.a_pattern, self.b_pattern):
+            if pat is not None:
+                arrays += [pat.row, pat.col, pat.val]
+        return self.assembly.nbytes() + sum(
+            a.nbytes for a in arrays if a is not None
         )
-        return CSR.from_coo(coo)
+
+
+def _staged_nnz(plan: "SpGEMMPlan", attr: str, field: str):
+    """Lazy element-count resolver reading the plan's staged blocks —
+    holds no reference to operand arrays beyond what the plan itself
+    stages, so unread reports cannot pin memory past release_values()."""
+    def resolve() -> int:
+        blocks = getattr(plan, attr)
+        if blocks is None:
+            raise ValueError(
+                f"{field}: plan values were released before the lazy "
+                f"report field was read"
+            )
+        return int(np.count_nonzero(blocks))
+
+    return resolve
 
 
 def _make_report(

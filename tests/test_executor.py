@@ -1,0 +1,305 @@
+"""Device-resident numeric executor tests: jittable output assembly,
+vmap-batched execute_batch, and the supporting cache/report satellites."""
+import numpy as np
+import pytest
+from _compat_hypothesis import given, settings, st
+
+from repro.core.gustavson import spgemm_gustavson
+from repro.data.pipeline import SpGEMMValueStream
+from repro.kernels import ref
+from repro.sparse.convert import to_bcsr, to_bcsv, to_csr
+from repro.sparse.formats import COO, CSR
+from repro.sparse.random import random_block_sparse, random_coo
+from repro.spgemm import (
+    PlanCache,
+    SpGEMMPlan,
+    schedule_build_count,
+    spgemm_plan,
+)
+
+
+def _int_coo(m, n, density, seed):
+    """Small-integer float32 values: exact in float32 under any accumulation
+    order, so oracle comparisons are bit-for-bit."""
+    coo = random_coo(m, n, density, "uniform", seed=seed)
+    rng = np.random.default_rng(seed + 999)
+    vals = rng.integers(-4, 5, coo.nnz).astype(np.float32)
+    coo.val = np.where(vals == 0, np.float32(1.0), vals)
+    return coo
+
+
+def _host_assemble(plan, panels: np.ndarray) -> CSR:
+    """The pre-executor host assembly (PR 1's SpGEMMPlan._assemble): scan
+    each output panel with np.nonzero and scatter into CSR. Kept here as
+    the reference the device-side gather assembly must reproduce."""
+    sch = plan.schedule
+    m, n = plan.assembly.shape
+    bm, bn = plan._bm, plan._bn
+    rows_l, cols_l, vals_l = [], [], []
+    span = sch.group * bm
+    for p in range(sch.n_panels):
+        g = int(sch.panel_group[p])
+        j = int(sch.panel_bcol[p])
+        r0 = g * span
+        sub = panels[p][: min(span, m - r0)]
+        rr, cc = np.nonzero(sub)
+        if rr.size == 0:
+            continue
+        rows_l.append(rr + r0)
+        cols_l.append(cc + j * bn)
+        vals_l.append(sub[rr, cc])
+    if not rows_l:
+        return CSR(np.zeros(m + 1, np.int64), np.zeros(0, np.int32),
+                   np.zeros(0, np.float32), (m, n))
+    coo = COO(
+        np.concatenate(rows_l).astype(np.int32),
+        np.concatenate(cols_l).astype(np.int32),
+        np.concatenate(vals_l), (m, n),
+    )
+    return CSR.from_coo(coo)
+
+
+def _kernel_panels(plan) -> np.ndarray:
+    """Run only the scheduled kernel (jnp path) on the plan's staged
+    blocks, bypassing the executor's fused assembly."""
+    sch = plan.schedule
+    return np.asarray(ref.spgemm_scheduled_ref(
+        plan._a_blocks, plan._b_blocks,
+        sch.a_slot, sch.b_slot, sch.panel, sch.sub_row,
+        sch.n_panels, sch.group,
+    ))
+
+
+class TestDeviceAssembly:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 500), group=st.integers(1, 3))
+    def test_matches_old_host_assemble(self, seed, group):
+        """Device gather assembly == the old np.nonzero host assembly on
+        random patterns (todense; the structural CSR additionally keeps
+        exact-zero elements of nonzero blocks)."""
+        rng = np.random.default_rng(seed)
+        m, k, n = rng.integers(20, 90, 3)
+        a = _int_coo(int(m), int(k), 0.1, seed)
+        b = _int_coo(int(k), int(n), 0.12, seed + 7)
+        plan = spgemm_plan(a, b, tile=8, group=group, backend="jnp",
+                           cache=PlanCache())
+        c_dev = plan.execute()
+        c_host = _host_assemble(plan, _kernel_panels(plan))
+        assert np.array_equal(c_dev.todense(), c_host.todense())
+        # Structural pattern: value-independent, includes the host-
+        # assembled (value-dependent) support.
+        assert c_dev.nnz == plan.assembly.nnz >= c_host.nnz
+
+    def test_execute_numeric_phase_has_no_host_nonzero(self, monkeypatch):
+        """Acceptance guard: after warmup, the numeric phase never calls
+        np.nonzero on host (assembly runs inside the jitted executor)."""
+        a = _int_coo(64, 48, 0.1, 3)
+        b = _int_coo(48, 64, 0.1, 4)
+        plan = spgemm_plan(a, b, tile=16, group=2, backend="jnp",
+                           cache=PlanCache())
+        # Warm both executor jits (blocks path and fused values path):
+        # tracing itself may touch np.nonzero inside jax.
+        plan.execute()
+        plan.execute(a.val, b.val)
+
+        def _forbidden(*args, **kwargs):
+            raise AssertionError("np.nonzero called in the numeric phase")
+
+        monkeypatch.setattr(np, "nonzero", _forbidden)
+        c = plan.execute(a.val * 2.0, b.val)
+        monkeypatch.undo()
+        ref_c = spgemm_gustavson(
+            to_csr(COO(a.row, a.col, a.val * 2.0, a.shape)), to_csr(b))
+        assert np.array_equal(c.todense(), ref_c.todense())
+
+    def test_results_share_precomputed_structure(self):
+        a = _int_coo(50, 40, 0.15, 11)
+        b = _int_coo(40, 50, 0.15, 12)
+        plan = spgemm_plan(a, b, tile=8, group=2, backend="jnp",
+                           cache=PlanCache())
+        c1, c2 = plan.execute(), plan.execute(a.val, b.val)
+        assert c1.indptr is plan.assembly.indptr
+        assert c1.indices is c2.indices
+
+
+class TestExecuteBatch:
+    @pytest.mark.parametrize("backend", ["jnp", "pallas_interpret"])
+    def test_equals_loop_of_executes(self, backend):
+        """execute_batch == a loop of single executes, elementwise and
+        bitwise (integer values), on both backends."""
+        a = _int_coo(80, 60, 0.1, 21)
+        b = _int_coo(60, 70, 0.12, 22)
+        plan = spgemm_plan(a, b, tile=16, group=2, backend=backend,
+                           cache=PlanCache())
+        stream = SpGEMMValueStream(plan.a_pattern, plan.b_pattern, seed=5,
+                                   integer_values=True, batch=5)
+        av, bv = stream.values_batch_at(0)
+        cs = plan.execute_batch(av, bv)
+        assert len(cs) == 5
+        for i, c in enumerate(cs):
+            single = plan.execute(av[i], bv[i])
+            assert np.array_equal(c.todense(), single.todense()), i
+
+    def test_batch_consumes_single_stream_sequence(self):
+        a = _int_coo(30, 30, 0.2, 31)
+        b = _int_coo(30, 30, 0.2, 32)
+        single = SpGEMMValueStream(a, b, seed=9)
+        batched = SpGEMMValueStream(a, b, seed=9, batch=3)
+        av, bv = batched.values_batch_at(1)  # steps 3, 4, 5
+        for i in range(3):
+            sa, sb = single.values_at(3 + i)
+            assert np.array_equal(av[i], sa) and np.array_equal(bv[i], sb)
+        d = batched.batch_at(0)
+        assert d["a_vals"].shape == (3, a.nnz)
+        with pytest.raises(ValueError):
+            single.values_batch_at(0)  # no batch size anywhere
+
+    def test_schedule_builds_flat_across_batched_executes(self):
+        a = _int_coo(60, 60, 0.1, 41)
+        b = _int_coo(60, 60, 0.1, 42)
+        plan = spgemm_plan(a, b, tile=16, group=2, backend="jnp",
+                           cache=PlanCache())
+        builds = schedule_build_count()
+        executes = plan.report.executes
+        rng = np.random.default_rng(0)
+        for bsz in (1, 4, 9):
+            av = rng.integers(-3, 4, (bsz, a.nnz)).astype(np.float32)
+            bv = rng.integers(-3, 4, (bsz, b.nnz)).astype(np.float32)
+            plan.execute_batch(av, bv)
+        assert schedule_build_count() == builds
+        assert plan.report.schedule_builds == 1
+        assert plan.report.executes == executes + 14
+
+    def test_empty_pattern(self):
+        a = COO(np.zeros(0, np.int32), np.zeros(0, np.int32),
+                np.zeros(0, np.float32), (32, 16))
+        b = _int_coo(16, 24, 0.2, 3)
+        plan = spgemm_plan(a, b, tile=8, group=2, backend="jnp",
+                           cache=PlanCache())
+        cs = plan.execute_batch(np.zeros((3, 0), np.float32),
+                                np.tile(b.val, (3, 1)))
+        assert len(cs) == 3
+        assert all(c.nnz == 0 and c.shape == (32, 24) for c in cs)
+        assert plan.execute_batch(np.zeros((0, 0), np.float32),
+                                  np.zeros((0, b.nnz), np.float32)) == []
+
+    def test_after_release_values(self):
+        """execute_batch never reads staged values: it works after
+        release_values(), while no-arg execute raises."""
+        a = _int_coo(40, 30, 0.15, 51)
+        b = _int_coo(30, 40, 0.15, 52)
+        plan = spgemm_plan(a, b, tile=8, group=2, backend="jnp",
+                           cache=PlanCache())
+        want = plan.execute().todense()
+        plan.release_values()
+        with pytest.raises(ValueError, match="released"):
+            plan.execute()
+        cs = plan.execute_batch(a.val[None], b.val[None])
+        assert np.array_equal(cs[0].todense(), want)
+
+    def test_block_plan_batch(self):
+        """Block plans batch over packed block arrays."""
+        ad = random_block_sparse(64, 64, (16, 16), 0.4, seed=61)
+        bd = random_block_sparse(64, 64, (16, 16), 0.4, seed=62)
+        a, b = to_bcsv(ad, (16, 16), 2), to_bcsr(bd, (16, 16))
+        plan = spgemm_plan(a, b, backend="jnp", cache=PlanCache())
+        av = np.stack([a.blocks, a.blocks * 2.0])
+        bv = np.stack([b.blocks, b.blocks])
+        cs = plan.execute_batch(av, bv)
+        ref64 = ad.astype(np.float64) @ bd.astype(np.float64)
+        np.testing.assert_allclose(cs[0].todense(), ref64, rtol=1e-4,
+                                   atol=1e-4)
+        np.testing.assert_allclose(cs[1].todense(), 2.0 * ref64, rtol=1e-4,
+                                   atol=1e-4)
+
+    def test_shape_validation(self):
+        a = _int_coo(40, 30, 0.15, 71)
+        b = _int_coo(30, 40, 0.15, 72)
+        plan = spgemm_plan(a, b, tile=8, group=2, backend="jnp",
+                           cache=PlanCache())
+        with pytest.raises(ValueError, match="a_vals"):
+            plan.execute_batch(np.zeros((2, a.nnz + 1), np.float32),
+                               np.zeros((2, b.nnz), np.float32))
+        with pytest.raises(ValueError, match="b_vals"):
+            plan.execute_batch(np.zeros((2, a.nnz), np.float32),
+                               np.zeros((3, b.nnz), np.float32))
+
+
+class TestLazyReport:
+    def test_from_blocks_report_is_lazy(self):
+        ad = random_block_sparse(64, 64, (16, 16), 0.4, seed=81)
+        bd = random_block_sparse(64, 64, (16, 16), 0.4, seed=82)
+        a, b = to_bcsv(ad, (16, 16), 2), to_bcsr(bd, (16, 16))
+        plan = SpGEMMPlan.from_blocks(a, b, backend="jnp")
+        rep = plan.report
+        # Unresolved until read: the uncached shim path pays neither the
+        # pattern digest nor the count_nonzero scans.
+        assert callable(rep._pattern_key)
+        assert callable(rep._nnz_a) and callable(rep._nnz_b)
+        plan.execute()  # numeric phase must not force them
+        plan.execute(a.blocks, b.blocks)  # nor the shim's value rebind
+        assert callable(rep._nnz_a) and callable(rep._pattern_key)
+        assert rep.nnz_a == int(np.count_nonzero(a.blocks))
+        d = rep.as_dict()
+        assert isinstance(d["pattern_key"], str) and len(d["pattern_key"])
+        assert d["nnz_b"] == int(np.count_nonzero(b.blocks))
+
+    def test_lazy_nnz_pins_no_memory_past_release(self):
+        """Unread nnz thunks read the plan's staged blocks (no operand
+        closure): resolving after release_values raises, while the
+        pattern digest (index arrays only) still resolves."""
+        ad = random_block_sparse(64, 64, (16, 16), 0.4, seed=83)
+        bd = random_block_sparse(64, 64, (16, 16), 0.4, seed=84)
+        plan = SpGEMMPlan.from_blocks(
+            to_bcsv(ad, (16, 16), 2), to_bcsr(bd, (16, 16)), backend="jnp")
+        plan.release_values()
+        with pytest.raises(ValueError, match="released"):
+            plan.report.nnz_a
+        assert isinstance(plan.report.pattern_key, str)
+
+    def test_element_plan_report_is_concrete(self):
+        a = _int_coo(40, 30, 0.15, 91)
+        b = _int_coo(30, 40, 0.15, 92)
+        plan = spgemm_plan(a, b, tile=8, group=2, backend="jnp",
+                           cache=PlanCache())
+        assert plan.report.nnz_a == a.nnz and plan.report.nnz_b == b.nnz
+        assert isinstance(plan.report.pattern_key, str)
+
+
+class TestPlanCacheBytes:
+    def _plan(self, seed, cache):
+        a = _int_coo(64, 64, 0.15, seed)
+        b = _int_coo(64, 64, 0.15, seed + 1)
+        return spgemm_plan(a, b, tile=16, group=2, backend="jnp",
+                           cache=cache)
+
+    def test_host_nbytes_positive_and_shrinks_nothing(self):
+        plan = self._plan(101, PlanCache())
+        n = plan.host_nbytes()
+        assert n > 0
+        plan.release_values()
+        assert 0 < plan.host_nbytes() < n
+
+    def test_max_bytes_evicts_lru(self):
+        probe = self._plan(111, PlanCache())
+        budget = int(probe.host_nbytes() * 1.5)
+        cache = PlanCache(max_bytes=budget)
+        p1 = self._plan(111, cache)
+        p2 = self._plan(222, cache)  # over budget -> evicts p1
+        assert len(cache) == 1
+        assert cache.stats.evictions == 1
+        assert cache.total_bytes <= budget
+        # p2 (most recent) survives even if it alone busts the budget.
+        small = PlanCache(max_bytes=1)
+        p3 = self._plan(333, small)
+        assert len(small) == 1
+        p3b = self._plan(333, small)
+        assert p3b is p3
+
+    def test_count_cap_still_applies(self):
+        cache = PlanCache(capacity=2)
+        plans = [self._plan(s, cache) for s in (211, 222, 233)]
+        assert len(cache) == 2
+        assert cache.stats.evictions == 1
+        with pytest.raises(ValueError):
+            PlanCache(max_bytes=0)
