@@ -8,6 +8,10 @@ time vs numeric-only execute time on the same pattern.
 """
 from __future__ import annotations
 
+import argparse
+import os
+import subprocess
+import sys
 import time
 
 import numpy as np
@@ -20,8 +24,18 @@ from repro.sparse.formats import COO
 from repro.sparse.random import random_block_sparse, suite_matrix
 from repro.spgemm import PlanCache, spgemm_plan
 
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
-def run(quiet: bool = False):
+# (matrix, scale, tile, group, batch) for the sharded section: sizes where
+# the per-shard working set drops under the batch-fusion knee, so sharding
+# buys both parallel shards and bigger fused chunks.
+_SHARDED_CASES = (
+    ("poisson3Da", 0.03, 16, 4, 32),
+    ("2cubes_sphere", 0.008, 16, 4, 32),
+)
+
+
+def run(quiet: bool = False, devices: int = 0):
     print("kernels,case,triples,b_fetches,block_omar_pct,flops,"
           "bytes_streamed,arith_intensity,plan_ms,execute_ms")
     for (m, k, n, da, db, g) in [
@@ -120,10 +134,99 @@ def run(quiet: bool = False):
             print(f"kernels,spgemm_batched_{name},{bsz},{nnz_set},"
                   f"{loop_ms:.1f},{batch_ms:.1f},{vps:.3e},"
                   f"{loop_ms / batch_ms:.2f}x")
+        # Plan-cache observability (PlanCache.stats() via the report).
+        cs = plan.report.as_dict()["cache_stats"]
+        print(f"kernels,plan_cache_{name},hits={cs['hits']},"
+              f"misses={cs['misses']},evictions={cs['evictions']},"
+              f"resident_plans={cs['resident_plans']},"
+              f"resident_bytes={cs['resident_bytes']}")
+
+    if devices > 1:
+        _sharded_section(devices)
 
 
-def main():
-    run()
+def _sharded_section(devices: int) -> None:
+    """Run the sharded benchmark in a subprocess with forced host devices
+    (the XLA device count must be set before jax imports — this process
+    already initialized the single-device backend)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"{env.get('XLA_FLAGS', '')} "
+        f"--xla_force_host_platform_device_count={devices}"
+    ).strip()
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_kernels",
+         "--sharded-worker", "--devices", str(devices)],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=1200,
+    )
+    sys.stdout.write(out.stdout)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"sharded benchmark worker failed:\n{out.stderr[-3000:]}"
+        )
+
+
+def _sharded_worker(devices: int) -> None:
+    """Child process body: per-shard triple imbalance + values/s scaling
+    of sharded execute_batch vs the single-device plan."""
+    import jax
+
+    from repro.launch.mesh import make_shard_mesh
+
+    n_dev = len(jax.devices())
+    print("kernels,sharded_case,shards,triples_max,triples_mean,"
+          "imbalance,batch_ms,values_per_s,scaling_vs_1")
+    shard_counts = [n for n in (2, 4, 8, 16) if n <= min(devices, n_dev)]
+    for name, scale, tile, group, batch in _SHARDED_CASES:
+        a = suite_matrix(name, scale=scale).to_coo().sum_duplicates()
+        b = COO(a.col, a.row, a.val, (a.shape[1], a.shape[0]))
+        single = spgemm_plan(a, b, tile=tile, group=group, backend="jnp",
+                             cache=PlanCache())
+        stream = SpGEMMValueStream(single.a_pattern, single.b_pattern,
+                                   seed=3)
+        av, bv = stream.values_batch_at(0, batch=batch)
+        nnz_set = single.report.nnz_a + single.report.nnz_b
+
+        def best_of(plan, reps: int = 5) -> float:
+            plan.execute_batch(av, bv)  # warm the jit
+            best = float("inf")
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                plan.execute_batch(av, bv)
+                best = min(best, time.perf_counter() - t0)
+            return best
+
+        t1 = best_of(single)
+        tmean = single.report.num_triples
+        print(f"kernels,spgemm_sharded_{name},1,{tmean},{tmean:.1f},"
+              f"1.00,{t1 * 1e3:.1f},{batch * nnz_set / t1:.3e},1.00x")
+        for n in shard_counts:
+            plan = spgemm_plan(a, b, tile=tile, group=group, backend="jnp",
+                               cache=PlanCache(), mesh=make_shard_mesh(n))
+            t = best_of(plan)
+            st = plan.shard_stats()
+            tmax = max(st["triples"])
+            tmean = sum(st["triples"]) / n
+            print(f"kernels,spgemm_sharded_{name},{n},{tmax},{tmean:.1f},"
+                  f"{st['imbalance']:.2f},{t * 1e3:.1f},"
+                  f"{batch * nnz_set / t:.3e},{t1 / t:.2f}x")
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--devices", type=int, default=4,
+                   help="forced host devices for the sharded section "
+                        "(0/1 skips it)")
+    p.add_argument("--sharded-worker", action="store_true",
+                   help=argparse.SUPPRESS)  # internal: child process body
+    args = p.parse_args(argv)
+    if args.sharded_worker:
+        _sharded_worker(args.devices)
+    else:
+        run(devices=args.devices)
 
 
 if __name__ == "__main__":

@@ -23,7 +23,9 @@ SECTIONS = [
     ("Table 8 — STUF", bench_stuf.main),
     ("Table 9 / Fig 8 — energy", bench_energy.main),
     ("Sec 4.2.4 — architectural parameters", bench_arch_params.main),
-    ("Kernel schedule metrics", bench_kernels.main),
+    # --devices 4: the sharded-plan section runs in a forced-host-device
+    # subprocess (per-shard imbalance + values/s scaling vs 1 device).
+    ("Kernel schedule metrics", lambda: bench_kernels.main(["--devices", "4"])),
     ("Roofline (from dry-run artifacts)", roofline.main),
 ]
 

@@ -18,7 +18,7 @@ from typing import Optional, Sequence
 import jax
 from jax.sharding import Mesh
 
-__all__ = ["make_production_mesh", "make_host_mesh"]
+__all__ = ["make_production_mesh", "make_host_mesh", "make_shard_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -36,6 +36,25 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
             "importing jax"
         )
     return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_shard_mesh(n_shards: Optional[int] = None, axis: str = "shard") -> Mesh:
+    """1-D mesh over the first ``n_shards`` devices (default: all) — the
+    mesh shape the sharded SpGEMM plan partitions its panel schedule over.
+
+    This is the one sanctioned way to get an SpGEMM device mesh: plans key
+    their cache entries on the mesh's axis/devices, so building meshes here
+    (rather than from ad-hoc device lists) keeps pattern-equal callers on
+    the same cache entry.
+    """
+    devices = jax.devices()
+    if n_shards is None:
+        n_shards = len(devices)
+    if n_shards < 1 or n_shards > len(devices):
+        raise ValueError(
+            f"n_shards={n_shards} out of range for {len(devices)} devices"
+        )
+    return jax.make_mesh((n_shards,), (axis,), devices=devices[:n_shards])
 
 
 def make_host_mesh(

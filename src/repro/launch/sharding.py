@@ -24,7 +24,9 @@ __all__ = [
     "ShardingRules",
     "default_rules",
     "use_rules",
+    "leading_sharding",
     "logical_spec",
+    "replicated_sharding",
     "shard",
     "named_sharding",
 ]
@@ -169,6 +171,21 @@ def shard(x: jax.Array, *names: Optional[str]) -> jax.Array:
     mesh, rules = state
     spec = rules.resolve(names)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def leading_sharding(mesh: Mesh, axis: str, ndim: int = 1) -> NamedSharding:
+    """Shard dimension 0 over one mesh axis, replicate the rest — the
+    layout of every per-shard stacked array in the sharded SpGEMM executor
+    (``[n_shards, ...]`` with the shard dim on ``axis``)."""
+    if axis not in mesh.axis_names:
+        raise ValueError(f"mesh has no axis {axis!r}: {mesh.axis_names}")
+    return NamedSharding(mesh, P(axis, *([None] * (ndim - 1))))
+
+
+def replicated_sharding(mesh: Mesh) -> NamedSharding:
+    """Fully replicate across the mesh (the B-operand layout in the
+    sharded SpGEMM executor)."""
+    return NamedSharding(mesh, P())
 
 
 def divisible_spec(shape: Sequence[int], spec: P, mesh: Mesh) -> P:

@@ -3,20 +3,47 @@
 Typical use::
 
     from repro.spgemm import spgemm_plan
+    from repro.launch.mesh import make_shard_mesh
 
     plan = spgemm_plan(a, b, tile=64, group=4, backend="auto")
     c0 = plan.execute()                     # staged values
     c1 = plan.execute(a_vals2, b_vals2)     # fresh values, zero symbolic work
     cs = plan.execute_batch(a_batch, b_batch)  # [batch, nnz] values, one
                                                # vmapped device call
-    print(plan.report.block_omar, plan.report.cache_hits)
+
+    sharded = spgemm_plan(a, b, tile=64, group=4,
+                          mesh=make_shard_mesh(4))  # ShardedSpGEMMPlan
+    c2 = sharded.execute(a_vals2, b_vals2)  # same semantics, 4 devices
 
 The numeric phase is device-resident (``repro.spgemm.executor``): value
 rebind, the scheduled kernel, and output assembly run under one ``jax.jit``
-against the symbolic phase's precomputed CSR structure. Plans are cached
-process-wide on ``(pattern hash, tile, group, backend)`` with optional
-byte-budget eviction; ``repro.kernels.ops.spgemm`` is a thin compatibility
-shim over this package.
+against the symbolic phase's precomputed CSR structure.
+
+**Sharded plans** (the mesh-aware path): passing ``mesh=`` partitions the
+symbolic panel schedule across the devices of one mesh axis —
+
+* *partitioning policy*: shard boundaries are block-row **group**
+  boundaries chosen to balance **triple count** (the numeric work unit,
+  not panel count) via :func:`repro.core.schedule.partition_spgemm_schedule`;
+  every shard is a contiguous slice of the parent schedule, so shards may
+  be ragged or empty and C stays a concatenation of contiguous row ranges;
+* *data placement*: packed A blocks / A values are **row-sharded** (each
+  shard's contiguous slot/value slice lives on its own device), packed B
+  blocks / B values are **replicated** — the paper's shared B-buffer
+  scheme lifted to the mesh — and C's packed values come back row-sharded,
+  assembled on host with one concatenation along the precomputed indptr
+  boundaries;
+* *execution*: one ``jax.jit(shard_map(...))`` call per execute (the jnp
+  scheduled kernel on every backend, as in the batched path), with each
+  shard running its own padded triple schedule against its own
+  :class:`~repro.core.schedule.AssemblyMap` slice.
+
+Plans are cached process-wide on ``(pattern hash, tile, group, backend,
+mesh key)`` — the mesh key pins the shard axis, shard count, and device
+ids, and is ``None`` on the unchanged single-device path — with optional
+byte-budget eviction and ``PlanCache.stats()`` observability;
+``repro.kernels.ops.spgemm`` is a thin compatibility shim over this
+package.
 """
 from repro.spgemm.cache import (
     CacheStats,
@@ -24,9 +51,10 @@ from repro.spgemm.cache import (
     default_cache,
     pattern_digest,
 )
-from repro.spgemm.executor import SpGEMMExecutor
+from repro.spgemm.executor import ShardedSpGEMMExecutor, SpGEMMExecutor
 from repro.spgemm.plan import (
     PlanReport,
+    ShardedSpGEMMPlan,
     SpGEMMPlan,
     resolve_backend,
     schedule_build_count,
@@ -37,6 +65,8 @@ __all__ = [
     "CacheStats",
     "PlanCache",
     "PlanReport",
+    "ShardedSpGEMMExecutor",
+    "ShardedSpGEMMPlan",
     "SpGEMMExecutor",
     "SpGEMMPlan",
     "default_cache",

@@ -39,9 +39,19 @@ def pattern_digest(*arrays: np.ndarray, meta: Tuple = ()) -> str:
 
 @dataclasses.dataclass
 class CacheStats:
+    """Live counters of one :class:`PlanCache`.
+
+    Exposed as the ``PlanCache.stats`` attribute; *calling* it
+    (``cache.stats()``) snapshots everything — counters, derived rates,
+    and residency — into a plain dict (the form surfaced through
+    ``PlanReport.as_dict()`` and the benchmark output).
+    """
+
     hits: int = 0
     misses: int = 0
     evictions: int = 0
+    resident_plans: int = 0  # plans currently held
+    resident_bytes: int = 0  # insert-time host_nbytes() of held plans
 
     @property
     def lookups(self) -> int:
@@ -51,13 +61,27 @@ class CacheStats:
     def hit_rate(self) -> float:
         return self.hits / self.lookups if self.lookups else 0.0
 
+    def __call__(self) -> dict:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "resident_plans": self.resident_plans,
+            "resident_bytes": self.resident_bytes,
+            "lookups": self.lookups,
+            "hit_rate": self.hit_rate,
+        }
+
 
 class PlanCache:
     """Thread-safe LRU cache of built :class:`~repro.spgemm.plan.SpGEMMPlan`.
 
-    Keys are ``(pattern_hash, tile, group, backend)`` tuples. ``get_or_build``
-    returns ``(plan, hit)`` so callers can attribute the lookup in their
-    reports.
+    Keys are ``(pattern_hash, tile, group, backend, mesh_key)`` tuples
+    (``mesh_key`` is ``None`` for single-device plans; sharded plans pin
+    the mesh axis, shard count, and device ids — see
+    ``repro.spgemm.plan._mesh_key``). ``get_or_build`` returns
+    ``(plan, hit)`` so callers can attribute the lookup in their reports;
+    ``stats``/``stats()`` expose live counters / a snapshot dict.
 
     Eviction is LRU under two caps: ``capacity`` (plan count) and, when set,
     ``max_bytes`` — a budget on the host memory the cached plans retain
@@ -95,6 +119,11 @@ class PlanCache:
         key, _ = self._plans.popitem(last=False)
         self._bytes -= self._sizes.pop(key, 0)
         self.stats.evictions += 1
+        self._sync_resident()
+
+    def _sync_resident(self) -> None:
+        self.stats.resident_plans = len(self._plans)
+        self.stats.resident_bytes = self._bytes
 
     def get_or_build(self, key: Tuple, builder: Callable):
         with self._lock:
@@ -106,7 +135,7 @@ class PlanCache:
         # Build outside the lock (symbolic phase can be expensive); a rare
         # duplicate build under contention is benign — last writer wins.
         plan = builder()
-        size = self._plan_size(plan) if self.max_bytes is not None else 0
+        size = self._plan_size(plan)
         with self._lock:
             if key in self._plans:  # lost a build race: replace, re-charge
                 self._bytes -= self._sizes.pop(key, 0)
@@ -119,6 +148,7 @@ class PlanCache:
             if self.max_bytes is not None:
                 while self._bytes > self.max_bytes and len(self._plans) > 1:
                     self._pop_lru()
+            self._sync_resident()
         return plan, False
 
     def __len__(self) -> int:

@@ -26,24 +26,84 @@ op shapes as the single-set path. The jitted entry points are module-level
 with static config arguments, so plans sharing shapes share executables;
 :class:`SpGEMMExecutor` wraps them with a plan's device-resident constants
 (schedule arrays, scatter indices, gather map — shipped to device once).
+
+The same shape-static property is what makes the phase meshable:
+:class:`ShardedSpGEMMExecutor` (the numeric phase of
+``repro.spgemm.plan.ShardedSpGEMMPlan``) stacks per-shard padded copies of
+those constants along a leading shard axis, lays them out over one mesh
+axis, and runs all three stages under a single ``shard_map`` — A
+row-sharded, B replicated, C row-sharded and concatenated on host.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+import os
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.schedule import AssemblyMap, SpGEMMSchedule
+try:  # public API since jax 0.6; the experimental alias is deprecated
+    from jax import shard_map
+except ImportError:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map
+
+from repro.core.schedule import AssemblyMap, ScheduleShard, SpGEMMSchedule
 from repro.kernels import ref
 from repro.kernels.gustavson_spgemm import (
     pad_schedule_arrays,
     spgemm_scheduled_impl,
 )
+from repro.launch.sharding import leading_sharding, replicated_sharding
 
-__all__ = ["SpGEMMExecutor", "numeric_core", "numeric_core_batch"]
+__all__ = [
+    "CHUNK_BYTES_ENV",
+    "ShardedSpGEMMExecutor",
+    "SpGEMMExecutor",
+    "numeric_core",
+    "numeric_core_batch",
+    "resolve_chunk_bytes",
+]
+
+# Per-backend working-set budget for fusing batch elements into one device
+# call: (per_set_budget_bytes, target_cache_bytes). The per-set budget is
+# the knee where a fused chunk's accumulator working set leaves the fast
+# memory tier (measured ~1.25 MB for CPU L2/L3 — see batch_chunk); the VMEM
+# and HBM-cache numbers are first-cut estimates for the ROADMAP's "re-tune
+# for VMEM" note, overridable without a code change via the env knob.
+CHUNK_BYTES_ENV = "REPRO_SPGEMM_CHUNK_BYTES"
+_CHUNK_POLICY = {
+    "cpu": ((5 << 20) // 4, 8 << 20),
+    "tpu": (16 << 20, 64 << 20),
+    "gpu": (4 << 20, 32 << 20),
+}
+
+
+def resolve_chunk_bytes(chunk_bytes: Optional[int] = None) -> Tuple[int, int]:
+    """Resolve the batch-fusion working-set budget.
+
+    Precedence: ``REPRO_SPGEMM_CHUNK_BYTES`` env var > explicit
+    ``chunk_bytes`` (constructor arg) > the per-backend default table.
+    Returns ``(per_set_budget, cache_bytes)``; the cache target scales with
+    an overridden budget so chunk sizing keeps its shape.
+    """
+    backend = jax.default_backend()
+    default_set, default_cache = _CHUNK_POLICY.get(
+        backend, _CHUNK_POLICY["cpu"]
+    )
+    env = os.environ.get(CHUNK_BYTES_ENV)
+    if env is not None:
+        per_set = int(env)
+    elif chunk_bytes is not None:
+        per_set = int(chunk_bytes)
+    else:
+        return default_set, default_cache
+    if per_set < 1:
+        raise ValueError(f"chunk bytes must be >= 1, got {per_set}")
+    scale = per_set / max(default_set, 1)
+    return per_set, max(per_set, int(default_cache * scale))
 
 _STATICS = ("n_panels", "group", "backend", "interpret")
 
@@ -187,8 +247,10 @@ class SpGEMMExecutor:
         b_scatter: Optional[np.ndarray] = None,
         a_shape: Tuple[int, ...] = (),
         b_shape: Tuple[int, ...] = (),
+        chunk_bytes: Optional[int] = None,
     ):
         self.backend = backend
+        self._chunk_policy = resolve_chunk_bytes(chunk_bytes)
         self.n_panels = schedule.n_panels
         self.group = schedule.group
         self.a_shape = tuple(a_shape)
@@ -238,21 +300,29 @@ class SpGEMMExecutor:
 
     def batch_chunk(
         self,
-        small_set_bytes: int = (5 << 20) // 4,
-        cache_bytes: int = 8 << 20,
+        small_set_bytes: Optional[int] = None,
+        cache_bytes: Optional[int] = None,
     ) -> int:
-        """Max batch elements per fused device call (empirical CPU policy).
+        """Max batch elements per fused device call.
 
         Fusing pays only when one set's working bytes (panel accumulator +
         einsum intermediates, ``4 * per_set_rows * bn``) are small: chunks
         sized to keep ``chunk * per_set`` under ``cache_bytes`` then cut
-        per-set cost 1.3-1.7x by amortizing dispatch. Above
+        per-set cost 1.3-1.7x by amortizing dispatch (measured, CPU). Above
         ``small_set_bytes`` per set, measured mid-size chunks *regress*
         (the fused scatter's accumulator leaves cache, 2-3x per-set), so
         larger problems run one set per call — matching a single
-        ``execute()`` minus its host rebind/staging work. Revisit for TPU:
-        the knee is a host-cache property (see ROADMAP).
+        ``execute()`` minus its host rebind/staging work.
+
+        Both knobs default to the resolved per-backend policy (constructor
+        ``chunk_bytes`` arg, overridden by ``REPRO_SPGEMM_CHUNK_BYTES``):
+        the CPU knee is an L2/L3 property and wrong for VMEM, so TPU/GPU
+        backends get their own table rows.
         """
+        if small_set_bytes is None:
+            small_set_bytes = self._chunk_policy[0]
+        if cache_bytes is None:
+            cache_bytes = self._chunk_policy[1]
         per_set = 4 * self._per_set_rows * self._bn
         if per_set <= small_set_bytes:
             return max(1, cache_bytes // max(per_set, 1))
@@ -279,8 +349,315 @@ class SpGEMMExecutor:
     def run_batch(self, a_vals, b_vals, *, rebind: bool) -> jax.Array:
         """Batched values -> packed C values [batch, nnz_c] (jnp path)."""
         return numeric_core_batch(
-            a_vals, b_vals, self._a_inv, self._b_inv,
+            jnp.asarray(a_vals), jnp.asarray(b_vals),
+            self._a_inv, self._b_inv,
             self._sched_jnp, self._gather,
             a_shape=self.a_shape, b_shape=self.b_shape, rebind=rebind,
             n_panels=self.n_panels, group=self.group,
         )
+
+
+class ShardedSpGEMMExecutor:
+    """Numeric phase of a mesh-partitioned plan: one ``shard_map`` call.
+
+    Drop-in for :class:`SpGEMMExecutor` on the plan side (same
+    ``run``/``run_values``/``run_batch``/``batch_chunk`` surface), but the
+    device-resident constants are *stacked per shard and laid out on the
+    mesh*: every per-shard array (``[n_shards, ...]``, padded to the
+    largest shard) is sharded over one mesh axis, B-side arrays are
+    replicated, and the numeric phase runs under a single
+    ``jax.jit(shard_map(...))`` — each device executes its own (padded)
+    triple schedule against its own A blocks and the replicated B blocks,
+    and emits its own packed C segment through its shard's
+    :class:`~repro.core.schedule.AssemblyMap` gather.
+
+    Layout contract (the tentpole's sharding policy):
+
+    * A values / packed A blocks — **row-sharded**: shard ``i`` holds the
+      slots ``[a_lo_i, a_hi_i)`` (elements ``[e_lo_i, e_hi_i)``), which are
+      contiguous because BCSV packs blocks group-major;
+    * B values / packed B blocks — **replicated** (the paper's shared
+      B-buffer scheme lifted to the mesh);
+    * C — **row-sharded**: the final CSR data is one host concatenation of
+      the per-shard segments along the precomputed indptr boundaries.
+
+    The kernel inside ``shard_map`` is the jnp (pure-XLA) scheduled path
+    for every backend, like ``run_batch`` on the unsharded executor (the
+    Pallas scalar-prefetch grid has no shard_map rule); padding triples
+    write to a dummy panel and padded gather slots are trimmed on host, so
+    ragged and empty shards are handled by construction.
+    """
+
+    def __init__(
+        self,
+        *,
+        shards: Sequence[ScheduleShard],
+        assemblies: Sequence[AssemblyMap],
+        mesh: Mesh,
+        axis: str,
+        backend: str,
+        a_scatter: Optional[np.ndarray] = None,
+        b_scatter: Optional[np.ndarray] = None,
+        a_shape: Tuple[int, ...] = (),
+        b_shape: Tuple[int, ...] = (),
+        a_val_bounds: Optional[np.ndarray] = None,
+        chunk_bytes: Optional[int] = None,
+    ):
+        if len(shards) != int(mesh.shape[axis]):
+            raise ValueError(
+                f"{len(shards)} shards for mesh axis {axis!r} of size "
+                f"{mesh.shape[axis]}"
+            )
+        self.backend = backend
+        self.mesh = mesh
+        self.axis = axis
+        self.a_shape = tuple(a_shape)
+        self.b_shape = tuple(b_shape)
+        self._chunk_policy = resolve_chunk_bytes(chunk_bytes)
+        self._shards = list(shards)
+        s0 = shards[0].schedule
+        self.group = s0.group
+        self._s = len(shards)
+        bm, bk = a_shape[1], a_shape[2]
+        self._bm, self._bn = bm, b_shape[2]
+        self._t_max = max(1, max(s.num_triples for s in shards))
+        self._p_max = max(1, max(s.n_panels for s in shards))
+        self._a_max = max(1, max(s.a_hi - s.a_lo for s in shards))
+        self._nnz_c = [asm.nnz for asm in assemblies]
+        self._c_max = max(1, max(self._nnz_c))
+        # Per-shard working set mirrors SpGEMMExecutor's basis, taken over
+        # the *largest* shard (each device only holds its own panels).
+        self._per_set_rows = (
+            (self._p_max + 1) * self.group + self._t_max
+        ) * bm
+
+        self._sep = leading_sharding(mesh, axis)
+        self._rep = replicated_sharding(mesh)
+
+        def put(arr, sharding):
+            return jax.device_put(np.ascontiguousarray(arr), sharding)
+
+        # Stacked, padded schedule [n_shards, t_max]: pads execute a real
+        # (block 0) x (block 0) matmul into the dummy panel p_max, which no
+        # gather reads.
+        a_slot = np.zeros((self._s, self._t_max), np.int32)
+        b_slot = np.zeros((self._s, self._t_max), np.int32)
+        panel = np.full((self._s, self._t_max), self._p_max, np.int32)
+        sub_row = np.zeros((self._s, self._t_max), np.int32)
+        for i, sh in enumerate(shards):
+            t = sh.num_triples
+            a_slot[i, :t] = sh.schedule.a_slot
+            b_slot[i, :t] = sh.schedule.b_slot
+            panel[i, :t] = sh.schedule.panel
+            sub_row[i, :t] = sh.schedule.sub_row
+        self._sched = tuple(
+            put(x, self._sep) for x in (a_slot, b_slot, panel, sub_row)
+        )
+        gdtype = np.result_type(*(asm.gather.dtype for asm in assemblies))
+        gather = np.zeros((self._s, self._c_max), gdtype)
+        for i, asm in enumerate(assemblies):
+            gather[i, : asm.nnz] = asm.gather
+        self._gather = put(gather, self._sep)
+
+        # Rebind maps (element plans): per-shard scatter inverses into the
+        # shard's padded value slice; index e_max is the zero pad slot.
+        self._a_inv = self._b_inv = None
+        self._e_bounds: Optional[np.ndarray] = None
+        self._e_max = 1
+        if a_scatter is not None and b_scatter is not None:
+            if a_val_bounds is None:
+                raise ValueError("element shards need a_val_bounds")
+            self._e_bounds = np.asarray(a_val_bounds, np.int64)
+            self._e_max = max(1, int(np.diff(self._e_bounds).max(initial=0)))
+            self._nnz_b = int(b_scatter.shape[0])
+            flat_a = self._a_max * bm * bk
+            a_inv = np.full((self._s, flat_a), self._e_max, np.int32)
+            for i, sh in enumerate(shards):
+                e_lo, e_hi = int(self._e_bounds[i]), int(self._e_bounds[i + 1])
+                pos = a_scatter[e_lo:e_hi] - sh.a_lo * bm * bk
+                # Elements of A blocks outside the shard's slot range never
+                # feed a triple (no matching B block) — skip them.
+                sel = (pos >= 0) & (pos < (sh.a_hi - sh.a_lo) * bm * bk)
+                a_inv[i, pos[sel]] = np.arange(e_hi - e_lo, dtype=np.int32)[sel]
+            self._a_inv = put(a_inv, self._sep)
+            self._b_inv = put(
+                _invert_scatter(b_scatter, int(np.prod(b_shape))), self._rep
+            )
+        self._fns: dict = {}
+
+    # -- layout helpers (host side) ---------------------------------------
+
+    @property
+    def can_rebind(self) -> bool:
+        return self._a_inv is not None and self._b_inv is not None
+
+    def batch_chunk(
+        self,
+        small_set_bytes: Optional[int] = None,
+        cache_bytes: Optional[int] = None,
+    ) -> int:
+        """Same policy as :meth:`SpGEMMExecutor.batch_chunk`, applied to
+        the largest shard's per-device working set."""
+        if small_set_bytes is None:
+            small_set_bytes = self._chunk_policy[0]
+        if cache_bytes is None:
+            cache_bytes = self._chunk_policy[1]
+        per_set = 4 * self._per_set_rows * self._bn
+        if per_set <= small_set_bytes:
+            return max(1, cache_bytes // max(per_set, 1))
+        return 1
+
+    def _concat(self, out: np.ndarray) -> np.ndarray:
+        """Trim per-shard pads and concatenate along the shard axis (the
+        CSR data order: shard row ranges are contiguous and ascending)."""
+        return np.concatenate(
+            [out[i, ..., : self._nnz_c[i]] for i in range(self._s)], axis=-1
+        )
+
+    def stage_a(self, blocks: np.ndarray) -> jax.Array:
+        """Full packed A blocks -> stacked per-shard device layout."""
+        return jax.device_put(self._stack_a(np.asarray(blocks)), self._sep)
+
+    def stage_b(self, blocks: np.ndarray) -> jax.Array:
+        """Full packed B blocks -> replicated device layout."""
+        return jax.device_put(np.asarray(blocks), self._rep)
+
+    def _stack_a(self, blocks: np.ndarray) -> np.ndarray:
+        """Full packed A ([..batch..], nnzb_a, bm, bk) -> per-shard slot
+        slices stacked and padded: (n_shards, [..batch..], a_max, bm, bk)."""
+        lead = blocks.shape[:-3]
+        out = np.zeros(
+            (self._s,) + lead + (self._a_max,) + blocks.shape[-2:],
+            blocks.dtype,
+        )
+        for i, sh in enumerate(self._shards):
+            out[i, ..., : sh.a_hi - sh.a_lo, :, :] = (
+                blocks[..., sh.a_lo: sh.a_hi, :, :]
+            )
+        return out
+
+    def _slice_a_vals(self, vals: np.ndarray) -> np.ndarray:
+        """[.., nnz_a] values -> [n_shards, .., e_max] padded slices."""
+        lead = vals.shape[:-1]
+        out = np.zeros((self._s,) + lead + (self._e_max,), vals.dtype)
+        for i in range(self._s):
+            e_lo, e_hi = int(self._e_bounds[i]), int(self._e_bounds[i + 1])
+            out[i, ..., : e_hi - e_lo] = vals[..., e_lo:e_hi]
+        return out
+
+    # -- shard_map cores ---------------------------------------------------
+
+    def _fn(self, kind: str):
+        if kind in self._fns:
+            return self._fns[kind]
+        ax, group = self.axis, self.group
+        a_max, p_max = self._a_max, self._p_max
+        bm, bk = self.a_shape[1], self.a_shape[2]
+        b_shape = self.b_shape
+
+        def kernel(a_blocks, b_blocks, a_slot, b_slot, panel, sub_row, gth):
+            panels = ref.spgemm_scheduled_ref(
+                a_blocks, b_blocks, a_slot, b_slot, panel, sub_row,
+                p_max + 1, group,
+            )
+            return panels.reshape(-1)[gth]
+
+        def kernel_batch(a_blocks, b_blocks, a_slot, b_slot, panel, sub_row,
+                         gth, bsz):
+            off = jnp.arange(bsz, dtype=jnp.int32)[:, None]
+            panels = ref.spgemm_scheduled_ref(
+                a_blocks, b_blocks,
+                (off * a_max + a_slot[None, :]).reshape(-1),
+                (off * b_shape[0] + b_slot[None, :]).reshape(-1),
+                (off * (p_max + 1) + panel[None, :]).reshape(-1),
+                jnp.tile(sub_row, bsz),
+                bsz * (p_max + 1), group,
+            )
+            return panels.reshape(bsz, -1)[:, gth]
+
+        if kind == "run":
+            def body(a_bl, b_bl, a_slot, b_slot, panel, sub_row, gth):
+                return kernel(a_bl[0], b_bl, a_slot[0], b_slot[0], panel[0],
+                              sub_row[0], gth[0])[None]
+            specs = (P(ax), P(), P(ax), P(ax), P(ax), P(ax), P(ax))
+        elif kind == "run_values":
+            def body(a_vals, b_vals, a_inv, b_inv, a_slot, b_slot, panel,
+                     sub_row, gth):
+                a_bl = _bind(a_vals[0], a_inv[0], (a_max, bm, bk))
+                b_bl = _bind(b_vals, b_inv, b_shape)
+                return kernel(a_bl, b_bl, a_slot[0], b_slot[0], panel[0],
+                              sub_row[0], gth[0])[None]
+            specs = (P(ax), P(), P(ax), P(), P(ax), P(ax), P(ax), P(ax),
+                     P(ax))
+        elif kind == "batch_values":
+            def body(a_vals, b_vals, a_inv, b_inv, a_slot, b_slot, panel,
+                     sub_row, gth):
+                bsz = a_vals.shape[1]
+                a_bl = _bind_batch(a_vals[0], a_inv[0], (a_max, bm, bk))
+                b_bl = _bind_batch(b_vals, b_inv, b_shape)
+                return kernel_batch(a_bl, b_bl, a_slot[0], b_slot[0],
+                                    panel[0], sub_row[0], gth[0], bsz)[None]
+            specs = (P(ax), P(), P(ax), P(), P(ax), P(ax), P(ax), P(ax),
+                     P(ax))
+        elif kind == "batch_blocks":
+            def body(a_vals, b_vals, a_slot, b_slot, panel, sub_row, gth):
+                bsz = a_vals.shape[1]
+                a_bl = a_vals[0].reshape((bsz * a_max, bm, bk))
+                b_bl = b_vals.reshape(
+                    (bsz * b_shape[0],) + tuple(b_shape[1:]))
+                return kernel_batch(a_bl, b_bl, a_slot[0], b_slot[0],
+                                    panel[0], sub_row[0], gth[0], bsz)[None]
+            specs = (P(ax), P(), P(ax), P(ax), P(ax), P(ax), P(ax))
+        else:  # pragma: no cover - internal
+            raise ValueError(kind)
+
+        fn = jax.jit(shard_map(
+            body, mesh=self.mesh, in_specs=specs, out_specs=P(ax),
+        ))
+        self._fns[kind] = fn
+        return fn
+
+    # -- public surface (SpGEMMExecutor drop-in) ---------------------------
+
+    def run(self, a_staged, b_staged) -> np.ndarray:
+        """Staged (stacked/replicated) packed blocks -> packed C values.
+
+        ``a_staged``/``b_staged`` come from :meth:`stage_a`/:meth:`stage_b`
+        (the sharded plan's device staging hooks).
+        """
+        out = np.asarray(
+            self._fn("run")(a_staged, b_staged, *self._sched, self._gather)
+        )
+        return self._concat(out)
+
+    def run_values(self, a_vals, b_vals) -> np.ndarray:
+        """[nnz] value vectors -> packed C values; A row-sharded on the
+        mesh, B replicated, rebind + kernel + assembly inside shard_map."""
+        a_sh = jax.device_put(
+            self._slice_a_vals(np.asarray(a_vals)), self._sep)
+        b_d = jax.device_put(np.asarray(b_vals), self._rep)
+        out = np.asarray(self._fn("run_values")(
+            a_sh, b_d, self._a_inv, self._b_inv, *self._sched, self._gather
+        ))
+        return self._concat(out)
+
+    def run_batch(self, a_vals, b_vals, *, rebind: bool) -> np.ndarray:
+        """Batched values -> packed C values [batch, nnz_c]; the batch is
+        folded into each shard's triple schedule (exact vmap semantics,
+        like the unsharded batch path) inside the one shard_map call."""
+        a_vals = np.asarray(a_vals)
+        b_vals = np.asarray(b_vals)
+        if rebind:
+            a_sh = jax.device_put(self._slice_a_vals(a_vals), self._sep)
+            b_d = jax.device_put(b_vals, self._rep)
+            out = np.asarray(self._fn("batch_values")(
+                a_sh, b_d, self._a_inv, self._b_inv, *self._sched,
+                self._gather,
+            ))
+        else:
+            a_sh = jax.device_put(self._stack_a(a_vals), self._sep)
+            b_d = jax.device_put(b_vals, self._rep)
+            out = np.asarray(self._fn("batch_blocks")(
+                a_sh, b_d, *self._sched, self._gather
+            ))
+        return self._concat(out)

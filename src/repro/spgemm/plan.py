@@ -36,25 +36,29 @@ value-independent, which is what makes assembly jittable and batchable.
 from __future__ import annotations
 
 import threading
-from typing import Callable, Optional, Tuple, Union
+from typing import Callable, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 
 from repro.core.schedule import (
     AssemblyMap,
+    ScheduleShard,
     SpGEMMSchedule,
     build_assembly_map,
     build_spgemm_schedule,
+    partition_spgemm_schedule,
 )
 from repro.sparse.convert import bcsr_from_coo, bcsv_from_coo, to_coo
 from repro.sparse.formats import BCSR, BCSV, COO, CSR
 from repro.spgemm.cache import PlanCache, default_cache, pattern_digest
-from repro.spgemm.executor import SpGEMMExecutor
+from repro.spgemm.executor import ShardedSpGEMMExecutor, SpGEMMExecutor
 
 __all__ = [
     "PlanReport",
+    "ShardedSpGEMMPlan",
     "SpGEMMPlan",
     "spgemm_plan",
     "resolve_backend",
@@ -81,7 +85,7 @@ def resolve_backend(backend: str = "auto") -> str:
 _REPORT_FIELDS = (
     "pattern_key", "tile", "group", "backend", "shape", "nnz_a", "nnz_b",
     "nnzb_a", "nnzb_b", "nnzb_c", "num_triples", "n_panels", "b_fetches",
-    "block_omar", "schedule_builds", "cache_hits", "executes",
+    "block_omar", "schedule_builds", "cache_hits", "executes", "cache_stats",
 )
 
 
@@ -115,6 +119,8 @@ class PlanReport:
         # when a pre-built schedule was supplied, else 1)
         cache_hits: int = 0,  # times this plan was served from a PlanCache
         executes: int = 0,  # numeric-phase runs (value sets, for batches)
+        cache_stats: Optional[dict] = None,  # serving PlanCache.stats()
+        # snapshot, refreshed on every spgemm_plan lookup for this plan
     ):
         self._pattern_key = pattern_key
         self._nnz_a = nnz_a
@@ -133,6 +139,7 @@ class PlanReport:
         self.schedule_builds = schedule_builds
         self.cache_hits = cache_hits
         self.executes = executes
+        self.cache_stats = cache_stats
 
     @property
     def pattern_key(self) -> str:
@@ -229,16 +236,10 @@ class SpGEMMPlan:
         )
         # Device-resident numeric executor: schedule + scatter + gather
         # staged to device once; runs the fused rebind/kernel/assembly jit.
-        self._executor: Optional[SpGEMMExecutor] = (
-            SpGEMMExecutor(
-                schedule=schedule,
-                assembly=self.assembly,
-                backend=backend,
-                a_scatter=a_scatter,
-                b_scatter=b_scatter,
-                a_shape=self._a_shape,
-                b_shape=self._b_shape,
-            )
+        # ``_make_executor`` is the subclass seam — ShardedSpGEMMPlan
+        # replaces it with the mesh-partitioned executor.
+        self._executor = (
+            self._make_executor()
             if schedule.num_triples and self.assembly.nnz
             else None
         )
@@ -252,6 +253,30 @@ class SpGEMMPlan:
         # (values, device array) pair.
         self._lock = threading.Lock()
 
+    def _make_executor(self):
+        """Build the numeric executor (called once, at plan build)."""
+        return SpGEMMExecutor(
+            schedule=self.schedule,
+            assembly=self.assembly,
+            backend=self.backend,
+            a_scatter=self._a_scatter,
+            b_scatter=self._b_scatter,
+            a_shape=self._a_shape,
+            b_shape=self._b_shape,
+        )
+
+    def _stage_a(self, blocks: np.ndarray):
+        """Host packed A blocks -> device layout for ``executor.run``.
+
+        copy=True: on CPU backends jnp.asarray may alias the numpy scratch
+        buffer, and a later rebind would mutate an earlier caller's staged
+        values mid-flight.
+        """
+        return jnp.array(blocks, copy=True)
+
+    def _stage_b(self, blocks: np.ndarray):
+        return jnp.array(blocks, copy=True)
+
     # -- construction -----------------------------------------------------
 
     @classmethod
@@ -263,6 +288,8 @@ class SpGEMMPlan:
         backend: str = "auto",
         schedule: Optional[SpGEMMSchedule] = None,
         pattern_key: str = "",
+        mesh: Optional[Mesh] = None,
+        mesh_axis: Optional[str] = None,
     ) -> "SpGEMMPlan":
         """Plan from pre-converted block formats (the ops.spgemm shim path).
 
@@ -297,13 +324,15 @@ class SpGEMMPlan:
             a.nnzb, b.nnzb, schedule,
         )
         report.schedule_builds = built
-        plan = cls(
+        plan_cls, extra = _resolve_plan_cls(mesh, mesh_axis)
+        plan = plan_cls(
             schedule=schedule,
             a_blocks=a.blocks,
             b_blocks=b.blocks,
             backend=backend,
             out_shape=(a.shape[0], b.shape[1]),
             report=report,
+            **extra,
         )
         report._nnz_a = _staged_nnz(plan, "_a_blocks", "nnz_a")
         report._nnz_b = _staged_nnz(plan, "_b_blocks", "nnz_b")
@@ -394,13 +423,10 @@ class SpGEMMPlan:
                 a_send = np.asarray(a_vals, dtype=self._a_dtype)
                 b_send = np.asarray(b_vals, dtype=self._b_dtype)
             else:
-                # copy=True: on CPU backends jnp.asarray may alias the
-                # numpy scratch buffer, and a later rebind would mutate an
-                # earlier caller's staged values mid-flight.
                 if self._a_dev is None:
-                    self._a_dev = jnp.array(self._a_blocks, copy=True)
+                    self._a_dev = self._stage_a(self._a_blocks)
                 if self._b_dev is None:
-                    self._b_dev = jnp.array(self._b_blocks, copy=True)
+                    self._b_dev = self._stage_b(self._b_blocks)
                 # Snapshot under the lock so a concurrent rebind on this
                 # shared plan cannot mix one caller's A with another's B.
                 a_dev, b_dev = self._a_dev, self._b_dev
@@ -466,10 +492,12 @@ class SpGEMMPlan:
         out = []
         for lo in range(0, batch, chunk):
             hi = min(lo + chunk, batch)
+            # Host slices go down as-is: the executor owns device layout
+            # (plain jnp.asarray unsharded; per-shard slicing + mesh
+            # placement on sharded plans).
             packed = np.asarray(
                 self._executor.run_batch(
-                    jnp.asarray(a_vals[lo:hi]), jnp.asarray(b_vals[lo:hi]),
-                    rebind=rebind,
+                    a_vals[lo:hi], b_vals[lo:hi], rebind=rebind,
                 )
             )
             out.extend(self._wrap_packed(packed[i]) for i in range(hi - lo))
@@ -517,6 +545,124 @@ class SpGEMMPlan:
         return self.assembly.nbytes() + sum(
             a.nbytes for a in arrays if a is not None
         )
+
+
+class ShardedSpGEMMPlan(SpGEMMPlan):
+    """A mesh-aware :class:`SpGEMMPlan`: the panel schedule is partitioned
+    across the devices of one mesh axis and the numeric phase runs as a
+    single ``shard_map`` call.
+
+    Construction (via ``spgemm_plan(..., mesh=...)``) partitions the
+    symbolic schedule at block-row-group boundaries balanced by **triple
+    count** (:func:`~repro.core.schedule.partition_spgemm_schedule`), builds
+    each shard's own :class:`~repro.core.schedule.AssemblyMap` slice, and
+    stages each shard's packed A blocks / schedule / gather map on its own
+    device (B replicated). ``execute`` / ``execute_batch`` keep the exact
+    single-device semantics — same lock / staged-value / copy-on-stage
+    behavior, same structural CSR output sharing the plan-wide
+    ``indptr``/``indices`` — because C's per-shard segments are contiguous
+    row ranges: the final CSR data is one concatenation along the
+    precomputed indptr boundaries.
+    """
+
+    def __init__(self, *, mesh: Mesh, mesh_axis: Optional[str] = None, **kw):
+        if mesh_axis is None:
+            mesh_axis = mesh.axis_names[0]
+        if mesh_axis not in mesh.axis_names:
+            raise ValueError(
+                f"mesh has no axis {mesh_axis!r}: {mesh.axis_names}"
+            )
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
+        self.n_shards = int(mesh.shape[mesh_axis])
+        self._shards: List[ScheduleShard] = []
+        self._shard_assemblies: List[AssemblyMap] = []
+        super().__init__(**kw)
+
+    def _make_executor(self):
+        self._shards = partition_spgemm_schedule(self.schedule, self.n_shards)
+        bm, bn, g = self._bm, self._bn, self._group
+        for sh in self._shards:
+            row_lo = min(sh.group_lo * g * bm, self._m)
+            row_hi = min(sh.group_hi * g * bm, self._m)
+            self._shard_assemblies.append(build_assembly_map(
+                sh.schedule, (bm, bn), (row_hi - row_lo, self._n)
+            ))
+        if sum(a.nnz for a in self._shard_assemblies) != self.assembly.nnz:
+            raise AssertionError(
+                "shard assembly slices do not cover the plan assembly"
+            )
+        a_val_bounds = None
+        if self._a_scatter is not None:
+            # Element values are canonical row-major, and shards own
+            # contiguous row ranges: each shard's A values are one slice.
+            a_val_bounds = np.concatenate([
+                np.searchsorted(
+                    self.a_pattern.row,
+                    [sh.group_lo * g * bm for sh in self._shards],
+                ),
+                [self.a_pattern.nnz],
+            ]).astype(np.int64)
+        return ShardedSpGEMMExecutor(
+            shards=self._shards,
+            assemblies=self._shard_assemblies,
+            mesh=self.mesh,
+            axis=self.mesh_axis,
+            backend=self.backend,
+            a_scatter=self._a_scatter,
+            b_scatter=self._b_scatter,
+            a_shape=self._a_shape,
+            b_shape=self._b_shape,
+            a_val_bounds=a_val_bounds,
+        )
+
+    def _stage_a(self, blocks: np.ndarray):
+        if self._executor is None:  # empty plan: nothing to lay out
+            return jnp.array(blocks, copy=True)
+        return self._executor.stage_a(blocks)
+
+    def _stage_b(self, blocks: np.ndarray):
+        if self._executor is None:
+            return jnp.array(blocks, copy=True)
+        return self._executor.stage_b(blocks)
+
+    def shard_stats(self) -> dict:
+        """Per-shard load profile: triple/panel/nnz counts plus the
+        max/mean triple-count imbalance the partitioner achieved."""
+        triples = [sh.num_triples for sh in self._shards]
+        mean = sum(triples) / max(len(triples), 1)
+        return {
+            "n_shards": self.n_shards,
+            "mesh_axis": self.mesh_axis,
+            "triples": triples,
+            "panels": [sh.n_panels for sh in self._shards],
+            "nnz_c": [a.nnz for a in self._shard_assemblies],
+            "imbalance": (max(triples) / mean) if mean else 0.0,
+        }
+
+    def host_nbytes(self) -> int:
+        return super().host_nbytes() + sum(
+            a.nbytes() for a in self._shard_assemblies
+        )
+
+
+def _resolve_plan_cls(mesh: Optional[Mesh], mesh_axis: Optional[str]):
+    """(plan class, extra ctor kwargs) for an optional mesh."""
+    if mesh is None:
+        return SpGEMMPlan, {}
+    return ShardedSpGEMMPlan, {"mesh": mesh, "mesh_axis": mesh_axis}
+
+
+def _mesh_key(mesh: Optional[Mesh], mesh_axis: Optional[str]):
+    """Cache-key component for the mesh/shard axis: plans stage per-shard
+    constants on concrete devices, so the key pins axis name, shard count,
+    and device identity. ``None`` for single-device plans keeps every
+    pre-mesh cache key shape unchanged."""
+    if mesh is None:
+        return None
+    axis = mesh_axis if mesh_axis is not None else mesh.axis_names[0]
+    return (axis, int(mesh.shape[axis]),
+            tuple(int(d.id) for d in np.ravel(mesh.devices)))
 
 
 def _staged_nnz(plan: "SpGEMMPlan", attr: str, field: str):
@@ -587,20 +733,28 @@ def spgemm_plan(
     group: int = 4,
     backend: str = "auto",
     cache: Optional[PlanCache] = None,
+    mesh: Optional[Mesh] = None,
+    mesh_axis: Optional[str] = None,
 ) -> SpGEMMPlan:
     """Build — or fetch from the plan cache — an :class:`SpGEMMPlan`.
 
     ``a``/``b`` may be dense arrays, any element-level sparse format
     (COO/CSR/CSC/CSV), or pre-converted BCSV/BCSR blocks (in which case
     ``tile``/``group`` are taken from the formats themselves). All symbolic
-    work happens here, once per distinct ``(pattern, tile, group, backend)``.
+    work happens here, once per distinct
+    ``(pattern, tile, group, backend, mesh shard axis)``.
 
-    Pass ``cache=PlanCache(...)`` to isolate from the process-level cache.
+    Pass ``mesh`` (e.g. from :func:`repro.launch.mesh.make_shard_mesh`) to
+    get a :class:`ShardedSpGEMMPlan` whose panel schedule is partitioned
+    over ``mesh_axis`` (default: the mesh's first axis); ``mesh=None`` is
+    the unchanged single-device path. Pass ``cache=PlanCache(...)`` to
+    isolate from the process-level cache.
     """
     global _SCHEDULE_BUILDS
     backend = resolve_backend(backend)
     if cache is None:
         cache = default_cache()
+    shard_key = _mesh_key(mesh, mesh_axis)
 
     if isinstance(a, BCSV) and isinstance(b, BCSR):
         if a.block_shape[1] != b.block_shape[0]:
@@ -608,11 +762,13 @@ def spgemm_plan(
                 f"block inner dims mismatch: {a.block_shape} vs {b.block_shape}"
             )
         tile3 = (a.block_shape[0], a.block_shape[1], b.block_shape[1])
-        key = (_block_pattern_key(a, b), tile3, a.group, backend)
+        key = (_block_pattern_key(a, b), tile3, a.group, backend, shard_key)
         plan, hit = cache.get_or_build(
             key, lambda: SpGEMMPlan.from_blocks(
-                a, b, backend=backend, pattern_key=key[0])
+                a, b, backend=backend, pattern_key=key[0],
+                mesh=mesh, mesh_axis=mesh_axis)
         )
+        plan.report.cache_stats = cache.stats()
         if hit:
             with plan._lock:
                 plan.report.cache_hits += 1
@@ -638,7 +794,7 @@ def spgemm_plan(
         meta=("coo", a_coo.shape, b_coo.shape,
               str(a_coo.val.dtype), str(b_coo.val.dtype)),
     )
-    key = (pattern, (bm, bk, bn), group, backend)
+    key = (pattern, (bm, bk, bn), group, backend, shard_key)
 
     def build() -> SpGEMMPlan:
         global _SCHEDULE_BUILDS
@@ -651,7 +807,8 @@ def spgemm_plan(
             (a_coo.shape[0], b_coo.shape[1]),
             a_coo.nnz, b_coo.nnz, a_bcsv.nnzb, b_bcsr.nnzb, schedule,
         )
-        return SpGEMMPlan(
+        plan_cls, extra = _resolve_plan_cls(mesh, mesh_axis)
+        return plan_cls(
             schedule=schedule,
             a_blocks=a_bcsv.blocks,
             b_blocks=b_bcsr.blocks,
@@ -662,9 +819,11 @@ def spgemm_plan(
             b_scatter=b_scatter,
             a_pattern=a_coo,
             b_pattern=b_coo,
+            **extra,
         )
 
     plan, hit = cache.get_or_build(key, build)
+    plan.report.cache_stats = cache.stats()
     if hit:
         with plan._lock:
             plan.report.cache_hits += 1

@@ -1,9 +1,55 @@
-"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see the real
-single CPU device (the 512-device override is dryrun.py-only)."""
+"""Shared fixtures. NOTE: no in-process XLA_FLAGS here — tests must see
+the real single CPU device (the 512-device override is dryrun.py-only).
+Multi-device coverage instead goes through :func:`forced_devices`, which
+runs test code in a fresh subprocess so the forced host-device count can
+be set before jax is imported without leaking into this process."""
+import os
+import subprocess
+import sys
+import textwrap
+
 import numpy as np
 import pytest
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
 @pytest.fixture(autouse=True)
 def _seed():
     np.random.seed(0)
+
+
+def run_forced_devices(code: str, devices: int = 8) -> str:
+    """Run a python snippet under ``--xla_force_host_platform_device_count``.
+
+    Subprocess-safe by construction: XLA reads the flag at backend init,
+    so it must be in the environment before the *first* jax import —
+    impossible to do reliably in-process once any test has touched jax.
+    The child gets its own interpreter, the parent's device topology is
+    untouched, and a nonzero exit fails the calling test with the child's
+    stderr. Shared by the ``forced_devices`` fixture and
+    tests/test_distributed.py.
+    """
+    env = dict(os.environ)
+    flags = env.get("XLA_FLAGS", "")
+    env["XLA_FLAGS"] = (
+        f"{flags} --xla_force_host_platform_device_count={devices}"
+    ).strip()
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=600, cwd=ROOT,
+    )
+    assert out.returncode == 0, (
+        f"forced-device subprocess failed:\n{out.stderr[-4000:]}"
+    )
+    return out.stdout
+
+
+@pytest.fixture(scope="session")
+def forced_devices():
+    """Fixture handle on :func:`run_forced_devices` (``run(code,
+    devices=8) -> stdout``)."""
+    return run_forced_devices

@@ -1,26 +1,7 @@
 """Distribution tests under a multi-device CPU mesh (subprocess: these need
-XLA_FLAGS set before jax import, which must not leak into other tests)."""
-import json
-import os
-import subprocess
-import sys
-import textwrap
-
-import pytest
-
-ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
-
-
-def _run(code: str, devices: int = 8) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    out = subprocess.run(
-        [sys.executable, "-c", textwrap.dedent(code)],
-        capture_output=True, text=True, env=env, timeout=600,
-    )
-    assert out.returncode == 0, out.stderr[-3000:]
-    return out.stdout
+XLA_FLAGS set before jax import, which must not leak into other tests —
+the shared helper lives in conftest.py)."""
+from conftest import run_forced_devices as _run
 
 
 class TestMeshAndSharding:

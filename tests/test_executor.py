@@ -266,6 +266,122 @@ class TestLazyReport:
         assert isinstance(plan.report.pattern_key, str)
 
 
+class TestBatchChunkPolicy:
+    def _executor(self, seed=0):
+        a = _int_coo(48, 48, 0.15, seed)
+        b = _int_coo(48, 48, 0.15, seed + 1)
+        plan = spgemm_plan(a, b, tile=8, group=2, backend="jnp",
+                           cache=PlanCache())
+        return plan._executor
+
+    def test_default_policy_is_backend_table(self):
+        from repro.spgemm.executor import _CHUNK_POLICY, resolve_chunk_bytes
+        import jax
+        assert resolve_chunk_bytes() == _CHUNK_POLICY.get(
+            jax.default_backend(), _CHUNK_POLICY["cpu"])
+
+    def test_constructor_arg_scales_chunk(self):
+        from repro.spgemm.executor import SpGEMMExecutor
+        a = _int_coo(48, 48, 0.15, 201)
+        b = _int_coo(48, 48, 0.15, 202)
+        plan = spgemm_plan(a, b, tile=8, group=2, backend="jnp",
+                           cache=PlanCache())
+        ex = plan._executor
+        per_set = 4 * ex._per_set_rows * ex._bn
+        # Explicit knobs still work (back-compat call signature)...
+        assert ex.batch_chunk(small_set_bytes=per_set - 1) == 1
+        assert ex.batch_chunk(small_set_bytes=per_set,
+                              cache_bytes=3 * per_set) == 3
+        # ...and the constructor arg sets the same policy as default.
+        tight = SpGEMMExecutor(
+            schedule=plan.schedule, assembly=plan.assembly, backend="jnp",
+            a_scatter=plan._a_scatter, b_scatter=plan._b_scatter,
+            a_shape=plan._a_shape, b_shape=plan._b_shape,
+            chunk_bytes=per_set - 1,
+        )
+        assert tight.batch_chunk() == 1
+
+    def test_env_var_overrides_constructor(self, monkeypatch):
+        from repro.spgemm.executor import CHUNK_BYTES_ENV, resolve_chunk_bytes
+        monkeypatch.setenv(CHUNK_BYTES_ENV, "1024")
+        per_set, cache_bytes = resolve_chunk_bytes(chunk_bytes=1 << 30)
+        assert per_set == 1024  # env wins over the constructor arg
+        assert cache_bytes >= per_set
+        ex = self._executor(203)
+        if 4 * ex._per_set_rows * ex._bn > 1024:
+            assert ex.batch_chunk() == 1
+        monkeypatch.setenv(CHUNK_BYTES_ENV, "0")
+        with pytest.raises(ValueError, match="chunk bytes"):
+            resolve_chunk_bytes()
+
+    def test_env_var_changes_plan_batching(self, monkeypatch):
+        """A tiny budget makes execute_batch run one set per device call
+        without changing results."""
+        from repro.spgemm.executor import CHUNK_BYTES_ENV
+        a = _int_coo(60, 50, 0.12, 211)
+        b = _int_coo(50, 60, 0.12, 212)
+        want = None
+        for env in (None, "1"):
+            if env is None:
+                monkeypatch.delenv(CHUNK_BYTES_ENV, raising=False)
+            else:
+                monkeypatch.setenv(CHUNK_BYTES_ENV, env)
+            plan = spgemm_plan(a, b, tile=8, group=2, backend="jnp",
+                               cache=PlanCache())
+            if env is not None:
+                assert plan._executor.batch_chunk() == 1
+            av = np.stack([a.val, a.val * 2.0])
+            bv = np.stack([b.val, b.val])
+            got = [c.todense() for c in plan.execute_batch(av, bv)]
+            if want is None:
+                want = got
+            else:
+                assert all(np.array_equal(g, w) for g, w in zip(got, want))
+
+
+class TestCacheStats:
+    def test_stats_callable_snapshot(self):
+        cache = PlanCache()
+        a = _int_coo(40, 40, 0.15, 301)
+        b = _int_coo(40, 40, 0.15, 302)
+        p = spgemm_plan(a, b, tile=8, group=2, backend="jnp", cache=cache)
+        spgemm_plan(a, b, tile=8, group=2, backend="jnp", cache=cache)
+        s = cache.stats()
+        assert s["hits"] == 1 and s["misses"] == 1
+        assert s["resident_plans"] == 1
+        assert s["resident_bytes"] >= p.host_nbytes() > 0
+        assert s["lookups"] == 2 and s["hit_rate"] == 0.5
+        # Attribute access (the pre-existing surface) still works.
+        assert cache.stats.hits == 1
+        cache.clear()
+        assert cache.stats()["resident_plans"] == 0
+
+    def test_eviction_updates_residency(self):
+        cache = PlanCache(capacity=1)
+        for seed in (311, 322):
+            a = _int_coo(40, 40, 0.15, seed)
+            b = _int_coo(40, 40, 0.15, seed + 1)
+            spgemm_plan(a, b, tile=8, group=2, backend="jnp", cache=cache)
+        s = cache.stats()
+        assert s["evictions"] == 1 and s["resident_plans"] == 1
+
+    def test_report_surfaces_cache_stats(self):
+        cache = PlanCache()
+        a = _int_coo(40, 40, 0.15, 331)
+        b = _int_coo(40, 40, 0.15, 332)
+        p = spgemm_plan(a, b, tile=8, group=2, backend="jnp", cache=cache)
+        d = p.report.as_dict()
+        assert d["cache_stats"]["misses"] == 1
+        spgemm_plan(a, b, tile=8, group=2, backend="jnp", cache=cache)
+        assert p.report.as_dict()["cache_stats"]["hits"] == 1
+        # Uncached from_blocks plans carry no cache stats.
+        from repro.sparse.convert import to_bcsv as _tv, to_bcsr as _tr
+        ad = random_block_sparse(32, 32, (16, 16), 0.5, seed=341)
+        bp = SpGEMMPlan.from_blocks(_tv(ad, (16, 16), 2), _tr(ad, (16, 16)),
+                                    backend="jnp")
+        assert bp.report.as_dict()["cache_stats"] is None
+
+
 class TestPlanCacheBytes:
     def _plan(self, seed, cache):
         a = _int_coo(64, 64, 0.15, seed)
