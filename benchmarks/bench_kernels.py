@@ -12,6 +12,7 @@ import argparse
 import os
 import subprocess
 import sys
+import tempfile
 import time
 
 import numpy as np
@@ -23,6 +24,7 @@ from repro.sparse.convert import to_bcsr, to_bcsv
 from repro.sparse.formats import COO
 from repro.sparse.random import random_block_sparse, suite_matrix
 from repro.spgemm import PlanCache, spgemm_plan
+from repro.spgemm.persist import PlanStore
 
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
@@ -141,8 +143,50 @@ def run(quiet: bool = False, devices: int = 0):
               f"resident_plans={cs['resident_plans']},"
               f"resident_bytes={cs['resident_bytes']}")
 
+    _persistence_section()
+
     if devices > 1:
         _sharded_section(devices)
+
+
+def _persistence_section() -> None:
+    """Cold plan build (full symbolic phase) vs warm restart (verified
+    disk load through the PlanCache disk tier) on the same pattern — the
+    amortization REPRO_SPGEMM_PLAN_DIR buys a restarted serving worker."""
+    print("kernels,persist_case,plan_file_kb,cold_plan_ms,warm_plan_ms,"
+          "warm_speedup,schedule_builds_warm")
+    for name, scale, tile, group in (
+        ("poisson3Da", 0.02, 32, 4),
+        ("2cubes_sphere", 0.003, 32, 4),
+    ):
+        a = suite_matrix(name, scale=scale).to_coo().sum_duplicates()
+        b = COO(a.col, a.row, a.val, (a.shape[1], a.shape[0]))  # A^T
+        with tempfile.TemporaryDirectory() as d:
+            store = PlanStore(d)
+
+            def cold():
+                store.clear()  # every repeat pays the full symbolic phase
+                return spgemm_plan(a, b, tile=tile, group=group,
+                                   backend="jnp",
+                                   cache=PlanCache(disk_dir=d))
+
+            def warm():
+                # Fresh cache on the populated directory = a restarted
+                # process; only conversion-to-COO/digest/rebind host work.
+                return spgemm_plan(a, b, tile=tile, group=group,
+                                   backend="jnp",
+                                   cache=PlanCache(disk_dir=d))
+
+            cold_ms = timeit(cold, repeats=3, warmup=0) * 1e3
+            cold()  # leave the store populated for the warm side
+            plan = warm()
+            if plan.report.schedule_builds != 0:
+                raise RuntimeError("warm restart re-ran the symbolic phase")
+            warm_ms = timeit(warm, repeats=3, warmup=0) * 1e3
+            kb = store.total_bytes() / 1024
+            print(f"kernels,spgemm_persist_{name},{kb:.0f},{cold_ms:.1f},"
+                  f"{warm_ms:.1f},{cold_ms / warm_ms:.2f}x,"
+                  f"{plan.report.schedule_builds}")
 
 
 def _sharded_section(devices: int) -> None:

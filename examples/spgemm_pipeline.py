@@ -102,6 +102,35 @@ assert plan2 is plan, "expected a cache hit"
 print(f"plan cache: hits={default_cache().stats.hits} "
       f"executes={rep.executes} schedule_builds={rep.schedule_builds}")
 
+# --- warm restart: the symbolic phase survives the process ----------------
+# PlanCache(disk_dir=...) persists the value-independent artifacts (triple
+# schedule, scatter indices, assembly map) to disk; a restarted worker
+# rehydrates the plan instead of re-running the symbolic phase. In
+# production, point REPRO_SPGEMM_PLAN_DIR at a shared directory and the
+# process-default cache does this with zero code changes:
+#
+#     REPRO_SPGEMM_PLAN_DIR=/var/cache/spgemm python serve.py
+#
+# Here both "processes" are fresh PlanCache instances over one directory.
+from repro.spgemm import PlanCache  # noqa: E402
+
+with tempfile.TemporaryDirectory() as plan_dir:
+    worker1 = spgemm_plan(a, b_coo, tile=TILE, group=GROUP, backend="jnp",
+                          cache=PlanCache(disk_dir=plan_dir))
+    c_cold = worker1.execute()
+    # ... the worker restarts: new cache, same directory, same pattern ...
+    restarted = PlanCache(disk_dir=plan_dir)
+    worker2 = spgemm_plan(a, b_coo, tile=TILE, group=GROUP, backend="jnp",
+                          cache=restarted)
+    assert worker2.report.schedule_builds == 0, "warm start rebuilt!"
+    assert worker2.report.load_hits >= 1
+    c_warm = worker2.execute()
+    assert np.array_equal(c_cold.data, c_warm.data), "warm C diverged"
+    s = restarted.stats()
+    print(f"warm restart: schedule_builds={worker2.report.schedule_builds} "
+          f"load_hits={worker2.report.load_hits} "
+          f"disk_files={s['disk_files']} disk_kb={s['disk_bytes'] // 1024}")
+
 # --- sharded serving: the same pattern partitioned over a 4-device mesh ---
 # The mesh extends the cache key, so this builds a second (sharded) plan;
 # A values are row-sharded, B replicated, C concatenated along the

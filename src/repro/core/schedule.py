@@ -42,9 +42,16 @@ __all__ = [
     "AssemblyMap",
     "ScheduleShard",
     "SpGEMMSchedule",
+    "assembly_from_arrays",
+    "assembly_to_arrays",
     "build_assembly_map",
     "build_spgemm_schedule",
     "partition_spgemm_schedule",
+    "schedule_from_arrays",
+    "schedule_to_arrays",
+    "shard_from_group_range",
+    "shards_from_bounds",
+    "shards_to_bounds",
 ]
 
 
@@ -273,6 +280,75 @@ def build_assembly_map(
     )
 
 
+# ---------------------------------------------------------------------------
+# Flat-array codecs (plan persistence)
+#
+# The on-disk plan store (repro/spgemm/persist.py) holds nothing but named
+# numpy arrays plus a JSON header, so every symbolic-phase artifact needs a
+# lossless flat-array form. Codecs are *bitwise* round-trips: dtypes and
+# shapes are preserved exactly, which is what lets a warm-restarted plan
+# produce bit-identical results to a cold-built one.
+# ---------------------------------------------------------------------------
+
+_SCHEDULE_ARRAY_FIELDS = (
+    "a_slot", "b_slot", "panel", "sub_row", "start",
+    "panel_group", "panel_bcol", "c_brow", "c_bcol",
+)
+_SCHEDULE_DIM_FIELDS = ("group", "grid_m", "grid_n", "grid_k")
+
+
+def schedule_to_arrays(
+    schedule: SpGEMMSchedule, prefix: str = "sched."
+) -> Dict[str, np.ndarray]:
+    """:class:`SpGEMMSchedule` -> flat ``{name: ndarray}`` dict."""
+    out = {prefix + f: getattr(schedule, f) for f in _SCHEDULE_ARRAY_FIELDS}
+    out[prefix + "dims"] = np.asarray(
+        [getattr(schedule, f) for f in _SCHEDULE_DIM_FIELDS], np.int64
+    )
+    return out
+
+
+def schedule_from_arrays(
+    arrays: Dict[str, np.ndarray], prefix: str = "sched."
+) -> SpGEMMSchedule:
+    """Inverse of :func:`schedule_to_arrays` (bitwise round-trip)."""
+    dims = np.asarray(arrays[prefix + "dims"])
+    if dims.shape != (len(_SCHEDULE_DIM_FIELDS),):
+        raise ValueError(f"bad schedule dims: shape {dims.shape}")
+    kwargs = {
+        f: np.asarray(arrays[prefix + f]) for f in _SCHEDULE_ARRAY_FIELDS
+    }
+    kwargs.update(zip(_SCHEDULE_DIM_FIELDS, (int(d) for d in dims)))
+    return SpGEMMSchedule(**kwargs)
+
+
+def assembly_to_arrays(
+    assembly: AssemblyMap, prefix: str = "asm."
+) -> Dict[str, np.ndarray]:
+    """:class:`AssemblyMap` -> flat ``{name: ndarray}`` dict."""
+    return {
+        prefix + "gather": assembly.gather,
+        prefix + "indptr": assembly.indptr,
+        prefix + "indices": assembly.indices,
+        prefix + "shape": np.asarray(assembly.shape, np.int64),
+    }
+
+
+def assembly_from_arrays(
+    arrays: Dict[str, np.ndarray], prefix: str = "asm."
+) -> AssemblyMap:
+    """Inverse of :func:`assembly_to_arrays` (bitwise round-trip)."""
+    shape = np.asarray(arrays[prefix + "shape"])
+    if shape.shape != (2,):
+        raise ValueError(f"bad assembly shape: {shape!r}")
+    return AssemblyMap(
+        np.asarray(arrays[prefix + "gather"]),
+        np.asarray(arrays[prefix + "indptr"]),
+        np.asarray(arrays[prefix + "indices"]),
+        (int(shape[0]), int(shape[1])),
+    )
+
+
 @dataclasses.dataclass
 class ScheduleShard:
     """One device's slice of a partitioned :class:`SpGEMMSchedule`.
@@ -378,42 +454,90 @@ def partition_spgemm_schedule(
     g_of_t = schedule.panel_group[schedule.panel]
     counts = np.bincount(g_of_t, minlength=max(n_groups, 1))[:max(n_groups, 1)]
     bounds = _balanced_boundaries(counts, n_shards)
-    shards: List[ScheduleShard] = []
-    for i in range(n_shards):
-        g_lo, g_hi = int(bounds[i]), int(bounds[i + 1])
-        t_lo, t_hi = np.searchsorted(g_of_t, [g_lo, g_hi])
-        p_lo, p_hi = np.searchsorted(schedule.panel_group, [g_lo, g_hi])
-        c_lo, c_hi = np.searchsorted(schedule.c_brow, [g_lo * g, g_hi * g])
-        t_lo, t_hi, p_lo, p_hi, c_lo, c_hi = map(
-            int, (t_lo, t_hi, p_lo, p_hi, c_lo, c_hi))
-        if t_hi > t_lo:
-            # BCSV packs blocks group-major, so the slots this shard's
-            # triples touch form a contiguous parent range.
-            a_lo = int(schedule.a_slot[t_lo:t_hi].min())
-            a_hi = int(schedule.a_slot[t_lo:t_hi].max()) + 1
-        else:
-            a_lo = a_hi = 0
-        grid_m_local = max(0, min(schedule.grid_m, g_hi * g) - g_lo * g)
-        local = SpGEMMSchedule(
-            a_slot=schedule.a_slot[t_lo:t_hi] - a_lo,
-            b_slot=schedule.b_slot[t_lo:t_hi].copy(),
-            panel=schedule.panel[t_lo:t_hi] - p_lo,
-            sub_row=schedule.sub_row[t_lo:t_hi].copy(),
-            start=schedule.start[t_lo:t_hi].copy(),
-            panel_group=schedule.panel_group[p_lo:p_hi] - g_lo,
-            panel_bcol=schedule.panel_bcol[p_lo:p_hi].copy(),
-            c_brow=schedule.c_brow[c_lo:c_hi] - g_lo * g,
-            c_bcol=schedule.c_bcol[c_lo:c_hi].copy(),
-            group=g,
-            grid_m=grid_m_local,
-            grid_n=schedule.grid_n,
-            grid_k=schedule.grid_k,
+    return shards_from_bounds(schedule, bounds)
+
+
+def shard_from_group_range(
+    schedule: SpGEMMSchedule, g_lo: int, g_hi: int
+) -> ScheduleShard:
+    """The shard owning parent block-row groups ``[g_lo, g_hi)``.
+
+    Everything beyond the group range is *derived* from the parent schedule
+    (triple/panel/C-block spans by searchsorted on the group-ascending
+    parent arrays, the A-slot span from the triples themselves), which is
+    what makes the group boundaries alone a complete serialization of a
+    partition: :func:`shards_from_bounds` rebuilds bitwise-identical
+    shards from an ``[n_shards + 1]`` bounds vector.
+    """
+    g = schedule.group
+    g_lo, g_hi = int(g_lo), int(g_hi)
+    g_of_t = schedule.panel_group[schedule.panel]
+    t_lo, t_hi = np.searchsorted(g_of_t, [g_lo, g_hi])
+    p_lo, p_hi = np.searchsorted(schedule.panel_group, [g_lo, g_hi])
+    c_lo, c_hi = np.searchsorted(schedule.c_brow, [g_lo * g, g_hi * g])
+    t_lo, t_hi, p_lo, p_hi, c_lo, c_hi = map(
+        int, (t_lo, t_hi, p_lo, p_hi, c_lo, c_hi))
+    if t_hi > t_lo:
+        # BCSV packs blocks group-major, so the slots this shard's
+        # triples touch form a contiguous parent range.
+        a_lo = int(schedule.a_slot[t_lo:t_hi].min())
+        a_hi = int(schedule.a_slot[t_lo:t_hi].max()) + 1
+    else:
+        a_lo = a_hi = 0
+    grid_m_local = max(0, min(schedule.grid_m, g_hi * g) - g_lo * g)
+    local = SpGEMMSchedule(
+        a_slot=schedule.a_slot[t_lo:t_hi] - a_lo,
+        b_slot=schedule.b_slot[t_lo:t_hi].copy(),
+        panel=schedule.panel[t_lo:t_hi] - p_lo,
+        sub_row=schedule.sub_row[t_lo:t_hi].copy(),
+        start=schedule.start[t_lo:t_hi].copy(),
+        panel_group=schedule.panel_group[p_lo:p_hi] - g_lo,
+        panel_bcol=schedule.panel_bcol[p_lo:p_hi].copy(),
+        c_brow=schedule.c_brow[c_lo:c_hi] - g_lo * g,
+        c_bcol=schedule.c_bcol[c_lo:c_hi].copy(),
+        group=g,
+        grid_m=grid_m_local,
+        grid_n=schedule.grid_n,
+        grid_k=schedule.grid_k,
+    )
+    return ScheduleShard(
+        schedule=local,
+        group_lo=g_lo, group_hi=g_hi,
+        triple_lo=t_lo, triple_hi=t_hi,
+        panel_lo=p_lo, panel_hi=p_hi,
+        a_lo=a_lo, a_hi=a_hi,
+    )
+
+
+def shards_to_bounds(shards: List[ScheduleShard]) -> np.ndarray:
+    """Partition -> its ``[n_shards + 1]`` group-boundary vector (the
+    shards' flat-array serialization; see :func:`shard_from_group_range`)."""
+    if not shards:
+        return np.zeros(1, np.int64)
+    return np.asarray(
+        [shards[0].group_lo] + [s.group_hi for s in shards], np.int64
+    )
+
+
+def shards_from_bounds(
+    schedule: SpGEMMSchedule, bounds: np.ndarray
+) -> List[ScheduleShard]:
+    """Rebuild a partition from its group-boundary vector.
+
+    Boundaries must be non-decreasing and cover all groups; anything else
+    (a stale or foreign persistence payload) raises rather than silently
+    mis-slicing."""
+    bounds = np.asarray(bounds, np.int64)
+    if bounds.ndim != 1 or bounds.shape[0] < 2:
+        raise ValueError(f"bad shard bounds: {bounds!r}")
+    if (np.diff(bounds) < 0).any() or int(bounds[0]) != 0:
+        raise ValueError(f"shard bounds not a partition: {bounds!r}")
+    n_groups = -(-schedule.grid_m // schedule.group) if schedule.grid_m else 0
+    if schedule.num_triples and int(bounds[-1]) < n_groups:
+        raise ValueError(
+            f"shard bounds cover {int(bounds[-1])} of {n_groups} groups"
         )
-        shards.append(ScheduleShard(
-            schedule=local,
-            group_lo=g_lo, group_hi=g_hi,
-            triple_lo=t_lo, triple_hi=t_hi,
-            panel_lo=p_lo, panel_hi=p_hi,
-            a_lo=a_lo, a_hi=a_hi,
-        ))
-    return shards
+    return [
+        shard_from_group_range(schedule, bounds[i], bounds[i + 1])
+        for i in range(bounds.shape[0] - 1)
+    ]

@@ -13,12 +13,49 @@ expert parallelism on the fastest ICI dimension.
 """
 from __future__ import annotations
 
+import inspect
 from typing import Optional, Sequence
 
 import jax
 from jax.sharding import Mesh
 
-__all__ = ["make_production_mesh", "make_host_mesh", "make_shard_mesh"]
+__all__ = [
+    "AXIS_TYPES_SUPPORTED",
+    "make_auto_mesh",
+    "make_production_mesh",
+    "make_host_mesh",
+    "make_shard_mesh",
+]
+
+# jax grew explicit-sharding axis types (jax.sharding.AxisType +
+# jax.make_mesh(axis_types=...)) well after 0.4.x; run with whichever this
+# jax provides — same pattern as kernels/_compat.py's CompilerParams shim.
+_AxisType = getattr(jax.sharding, "AxisType", None)
+AXIS_TYPES_SUPPORTED = (
+    _AxisType is not None
+    and "axis_types" in inspect.signature(jax.make_mesh).parameters
+)
+
+
+def make_auto_mesh(
+    shape: Sequence[int],
+    axes: Sequence[str],
+    *,
+    devices: Optional[Sequence] = None,
+) -> Mesh:
+    """``jax.make_mesh`` with every axis pinned to ``AxisType.Auto`` when
+    this jax supports axis types, and the plain call otherwise.
+
+    On new jax, ``Auto`` is the pre-explicit-sharding behavior, so both
+    branches build the same mesh semantics; callers never touch
+    ``jax.sharding.AxisType`` directly (absent on older jax)."""
+    axes = tuple(axes)
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if AXIS_TYPES_SUPPORTED:
+        kwargs["axis_types"] = (_AxisType.Auto,) * len(axes)
+    return jax.make_mesh(tuple(shape), axes, **kwargs)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -35,7 +72,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
             "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
             "importing jax"
         )
-    return jax.make_mesh(shape, axes, devices=devices[:n])
+    return make_auto_mesh(shape, axes, devices=devices[:n])
 
 
 def make_shard_mesh(n_shards: Optional[int] = None, axis: str = "shard") -> Mesh:
@@ -54,7 +91,7 @@ def make_shard_mesh(n_shards: Optional[int] = None, axis: str = "shard") -> Mesh
         raise ValueError(
             f"n_shards={n_shards} out of range for {len(devices)} devices"
         )
-    return jax.make_mesh((n_shards,), (axis,), devices=devices[:n_shards])
+    return make_auto_mesh((n_shards,), (axis,), devices=devices[:n_shards])
 
 
 def make_host_mesh(
@@ -65,4 +102,4 @@ def make_host_mesh(
     n = len(jax.devices())
     if shape is None:
         shape = (n, 1)
-    return jax.make_mesh(tuple(shape), tuple(axes))
+    return make_auto_mesh(shape, axes)

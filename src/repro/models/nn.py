@@ -25,10 +25,33 @@ __all__ = [
     "dense_t",
     "rmsnorm_t",
     "embedding_t",
+    "optimization_barrier",
     "rmsnorm",
     "dense",
     "embed_lookup",
 ]
+
+
+@jax.custom_jvp
+def optimization_barrier(x):
+    """Differentiable identity fence: ``jax.lax.optimization_barrier`` with
+    pass-through tangents.
+
+    The raw primitive has no differentiation rule, so placing it inside a
+    ``grad``-transformed scan body (the remat residual fence in
+    ``transformer.forward``) raises ``NotImplementedError``. The barrier
+    only needs to pin the *primal* value against XLA hoisting; tangents and
+    cotangents flow through unchanged (the JVP is linear in the tangent, so
+    reverse mode transposes it for free). Accepts any pytree, like the raw
+    primitive.
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+@optimization_barrier.defjvp
+def _optimization_barrier_jvp(primals, tangents):
+    (x,), (dx,) = primals, tangents
+    return jax.lax.optimization_barrier(x), dx
 
 
 @dataclasses.dataclass(frozen=True)

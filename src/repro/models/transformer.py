@@ -30,6 +30,7 @@ from repro.models.nn import (
     embedding_t,
     init_params,
     logical_axes,
+    optimization_barrier,
     rmsnorm,
     rmsnorm_t,
 )
@@ -143,9 +144,11 @@ def forward(
         # layer; pin it to the sequence-parallel layout (1/TP bytes) and
         # fence it so XLA cannot hoist the next layer's f32 upcast across
         # the save (observed: the stacked residual buffer became f32 —
-        # 2x the bytes — without the barrier).
+        # 2x the bytes — without the barrier). The differentiable wrapper
+        # keeps the fence legal under grad (the raw primitive has no
+        # differentiation rule).
         x = shard(x, "batch", "seq_resid", "embed")
-        x = jax.lax.optimization_barrier(x)
+        x = optimization_barrier(x)
         return (x, aux), None
 
     if cfg.remat == "full":

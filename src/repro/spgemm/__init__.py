@@ -38,10 +38,23 @@ symbolic panel schedule across the devices of one mesh axis —
   shard running its own padded triple schedule against its own
   :class:`~repro.core.schedule.AssemblyMap` slice.
 
-Plans are cached process-wide on ``(pattern hash, tile, group, backend,
-mesh key)`` — the mesh key pins the shard axis, shard count, and device
-ids, and is ``None`` on the unchanged single-device path — with optional
-byte-budget eviction and ``PlanCache.stats()`` observability;
+Plans are cached in a **two-tier** cache keyed on ``(pattern hash, tile,
+group, backend, mesh key)`` — the mesh key pins the shard axis, shard
+count, and device ids, and is ``None`` on the unchanged single-device
+path:
+
+* the **memory tier** is a process-wide LRU of live plan objects (count +
+  byte budgets, ``PlanCache.stats()`` observability);
+* the **disk tier** (opt-in: ``PlanCache(disk_dir=...)``, or point
+  ``REPRO_SPGEMM_PLAN_DIR`` at a directory for the process-default cache)
+  persists the value-independent symbolic artifacts — triple schedule,
+  scatter indices, assembly map, shard bounds — through
+  ``repro.spgemm.persist.PlanStore``, so a **warm-restarted** process
+  rehydrates its plans (``report.schedule_builds == 0``,
+  ``report.load_hits >= 1``) with results bitwise-equal to a cold build.
+  Files carry a format-version header, the full cache key, and a payload
+  digest; anything stale or corrupt degrades to a silent fresh build.
+
 ``repro.kernels.ops.spgemm`` is a thin compatibility shim over this
 package.
 """
@@ -51,6 +64,7 @@ from repro.spgemm.cache import (
     default_cache,
     pattern_digest,
 )
+from repro.spgemm.persist import PLAN_DIR_ENV, PlanStore
 from repro.spgemm.executor import ShardedSpGEMMExecutor, SpGEMMExecutor
 from repro.spgemm.plan import (
     PlanReport,
@@ -63,8 +77,10 @@ from repro.spgemm.plan import (
 
 __all__ = [
     "CacheStats",
+    "PLAN_DIR_ENV",
     "PlanCache",
     "PlanReport",
+    "PlanStore",
     "ShardedSpGEMMExecutor",
     "ShardedSpGEMMPlan",
     "SpGEMMExecutor",

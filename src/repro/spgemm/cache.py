@@ -1,21 +1,36 @@
-"""Process-level plan cache + sparsity-pattern fingerprinting.
+"""Two-tier plan cache + sparsity-pattern fingerprinting.
 
 The paper's host program converts inputs "once" (Sec. 4.3); the serving
 north-star multiplies one sparsity pattern with fresh values millions of
-times. The cache makes that amortization automatic: plans are keyed on
-``(pattern hash, tile, group, backend)`` so any caller presenting a
-pattern-equal input gets the already-built plan object back, paying only
-the numeric phase.
+times. The cache makes that amortization automatic — and, with the disk
+tier, *durable*: plans are keyed on ``(pattern hash, tile, group, backend,
+mesh key)`` so any caller presenting a pattern-equal input gets the
+already-built plan object back, paying only the numeric phase.
+
+Tiers, checked in order:
+
+1. **memory** — a thread-safe LRU of live plan objects (count +
+   ``max_bytes`` budgets), exactly the pre-persistence behavior;
+2. **disk** (opt-in: ``PlanCache(disk_dir=...)``, or
+   ``REPRO_SPGEMM_PLAN_DIR`` for the process-default cache) — the
+   value-independent symbolic artifacts in a
+   :class:`~repro.spgemm.persist.PlanStore`. A memory miss tries a
+   verified disk load (rehydrated through the caller's ``loader``); any
+   load failure silently falls back to a fresh symbolic build, and fresh
+   builds are written back so the *next* process starts warm.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
+import os
 import threading
 from collections import OrderedDict
 from typing import Callable, Optional, Tuple
 
 import numpy as np
+
+from repro.spgemm.persist import PLAN_DIR_ENV, PlanStore
 
 __all__ = ["CacheStats", "PlanCache", "default_cache", "pattern_digest"]
 
@@ -47,11 +62,21 @@ class CacheStats:
     ``PlanReport.as_dict()`` and the benchmark output).
     """
 
-    hits: int = 0
-    misses: int = 0
+    hits: int = 0  # memory-tier hits
+    misses: int = 0  # memory-tier misses (may still hit disk)
     evictions: int = 0
     resident_plans: int = 0  # plans currently held
     resident_bytes: int = 0  # insert-time host_nbytes() of held plans
+    # Disk tier (all zero when the tier is disabled).
+    disk_hits: int = 0  # memory misses served by a verified disk load
+    disk_misses: int = 0  # memory misses with no usable disk entry
+    loads: int = 0  # successful plan rehydrations (== disk_hits)
+    load_failures: int = 0  # well-formed files the loader rejected
+    stores: int = 0  # fresh builds written back to disk
+    # The owning cache's PlanStore (snapshot source only, not a counter).
+    store: Optional[PlanStore] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
 
     @property
     def lookups(self) -> int:
@@ -70,6 +95,21 @@ class CacheStats:
             "resident_bytes": self.resident_bytes,
             "lookups": self.lookups,
             "hit_rate": self.hit_rate,
+            "disk_hits": self.disk_hits,
+            "disk_misses": self.disk_misses,
+            "loads": self.loads,
+            "load_failures": self.load_failures,
+            "stores": self.stores,
+            **(
+                {
+                    "disk_dir": self.store.root,
+                    "disk_files": len(self.store),
+                    "disk_bytes": self.store.total_bytes(),
+                    "disk_evictions": self.store.evictions,
+                }
+                if self.store is not None
+                else {}
+            ),
         }
 
 
@@ -89,16 +129,31 @@ class PlanCache:
     large-operand one-shot workloads cannot pin unbounded host memory. The
     most recently inserted plan is always kept, even when it alone exceeds
     the byte budget.
+
+    ``disk_dir`` enables the disk tier (see the module docstring): memory
+    misses try a verified :class:`~repro.spgemm.persist.PlanStore` load
+    before building, fresh builds are written back, and ``disk_max_bytes``
+    bounds the directory (oldest-used files evicted after each save).
     """
 
-    def __init__(self, capacity: int = 64, max_bytes: Optional[int] = None):
+    def __init__(
+        self,
+        capacity: int = 64,
+        max_bytes: Optional[int] = None,
+        disk_dir: Optional[str] = None,
+        disk_max_bytes: Optional[int] = None,
+    ):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         if max_bytes is not None and max_bytes < 1:
             raise ValueError("max_bytes must be >= 1 (or None)")
         self.capacity = capacity
         self.max_bytes = max_bytes
-        self.stats = CacheStats()
+        self.store = (
+            PlanStore(disk_dir, max_bytes=disk_max_bytes)
+            if disk_dir else None
+        )
+        self.stats = CacheStats(store=self.store)
         self._lock = threading.Lock()
         self._plans: OrderedDict = OrderedDict()
         self._sizes: dict = {}
@@ -125,16 +180,63 @@ class PlanCache:
         self.stats.resident_plans = len(self._plans)
         self.stats.resident_bytes = self._bytes
 
-    def get_or_build(self, key: Tuple, builder: Callable):
+    def get_or_build(
+        self,
+        key: Tuple,
+        builder: Callable,
+        loader: Optional[Callable] = None,
+    ):
+        """Fetch or build the plan for ``key``; returns ``(plan, hit)``.
+
+        ``hit`` is True only for memory-tier hits (the caller rebinds its
+        values into the shared live object on that path). ``loader`` is the
+        disk-tier rehydrator — ``loader(arrays, meta) -> plan`` — invoked
+        on a memory miss when the disk tier holds a verified entry for
+        ``key``; if it raises, the entry is treated as unusable and the
+        plan is rebuilt from scratch (the store deletes files that fail
+        verification itself). Loaded plans carry the caller's values
+        already, so they return with ``hit=False``.
+        """
         with self._lock:
             if key in self._plans:
                 self.stats.hits += 1
                 self._plans.move_to_end(key)
                 return self._plans[key], True
             self.stats.misses += 1
-        # Build outside the lock (symbolic phase can be expensive); a rare
-        # duplicate build under contention is benign — last writer wins.
-        plan = builder()
+        # Load / build outside the lock (the symbolic phase can be
+        # expensive); a rare duplicate build under contention is benign —
+        # last writer wins.
+        plan = None
+        if self.store is not None and loader is not None:
+            payload = self.store.load(key)
+            if payload is None:
+                with self._lock:
+                    self.stats.disk_misses += 1
+            else:
+                try:
+                    plan = loader(*payload)
+                    with self._lock:
+                        self.stats.disk_hits += 1
+                        self.stats.loads += 1
+                except Exception:
+                    # Verified file, unusable content (e.g. a future plan
+                    # kind): fall back to a fresh symbolic build.
+                    with self._lock:
+                        self.stats.load_failures += 1
+                    plan = None
+        if plan is None:
+            plan = builder()
+            if self.store is not None:
+                art = getattr(plan, "persist_artifacts", None)
+                if callable(art):
+                    try:
+                        arrays, meta = art()
+                        stored = self.store.save(key, arrays, meta)
+                        if stored is not None:
+                            with self._lock:
+                                self.stats.stores += 1
+                    except Exception:
+                        pass  # persistence is an optimization, never fatal
         size = self._plan_size(plan)
         with self._lock:
             if key in self._plans:  # lost a build race: replace, re-charge
@@ -160,16 +262,29 @@ class PlanCache:
             return key in self._plans
 
     def clear(self) -> None:
+        """Drop the memory tier (disk entries, if any, are kept — they are
+        exactly the state a restart would see)."""
         with self._lock:
             self._plans.clear()
             self._sizes.clear()
             self._bytes = 0
-            self.stats = CacheStats()
+            self.stats = CacheStats(store=self.store)
 
 
-_DEFAULT_CACHE = PlanCache()
+_DEFAULT_CACHE: Optional[PlanCache] = None
+_DEFAULT_LOCK = threading.Lock()
 
 
 def default_cache() -> PlanCache:
-    """The process-level cache used when no explicit cache is passed."""
-    return _DEFAULT_CACHE
+    """The process-level cache used when no explicit cache is passed.
+
+    Created lazily so ``REPRO_SPGEMM_PLAN_DIR`` (set by the launcher
+    before the first plan build) enables the disk tier without any code
+    change — the warm-restart path for serving fleets."""
+    global _DEFAULT_CACHE
+    with _DEFAULT_LOCK:
+        if _DEFAULT_CACHE is None:
+            _DEFAULT_CACHE = PlanCache(
+                disk_dir=os.environ.get(PLAN_DIR_ENV) or None
+            )
+        return _DEFAULT_CACHE

@@ -45,18 +45,17 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-try:  # public API since jax 0.6; the experimental alias is deprecated
-    from jax import shard_map
-except ImportError:  # pragma: no cover - depends on installed jax
-    from jax.experimental.shard_map import shard_map
-
 from repro.core.schedule import AssemblyMap, ScheduleShard, SpGEMMSchedule
 from repro.kernels import ref
 from repro.kernels.gustavson_spgemm import (
     pad_schedule_arrays,
     spgemm_scheduled_impl,
 )
-from repro.launch.sharding import leading_sharding, replicated_sharding
+from repro.launch.sharding import (
+    leading_sharding,
+    replicated_sharding,
+    shard_map,
+)
 
 __all__ = [
     "CHUNK_BYTES_ENV",

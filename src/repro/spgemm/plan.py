@@ -47,9 +47,15 @@ from repro.core.schedule import (
     AssemblyMap,
     ScheduleShard,
     SpGEMMSchedule,
+    assembly_from_arrays,
+    assembly_to_arrays,
     build_assembly_map,
     build_spgemm_schedule,
     partition_spgemm_schedule,
+    schedule_from_arrays,
+    schedule_to_arrays,
+    shards_from_bounds,
+    shards_to_bounds,
 )
 from repro.sparse.convert import bcsr_from_coo, bcsv_from_coo, to_coo
 from repro.sparse.formats import BCSR, BCSV, COO, CSR
@@ -85,7 +91,8 @@ def resolve_backend(backend: str = "auto") -> str:
 _REPORT_FIELDS = (
     "pattern_key", "tile", "group", "backend", "shape", "nnz_a", "nnz_b",
     "nnzb_a", "nnzb_b", "nnzb_c", "num_triples", "n_panels", "b_fetches",
-    "block_omar", "schedule_builds", "cache_hits", "executes", "cache_stats",
+    "block_omar", "schedule_builds", "cache_hits", "executes", "loads",
+    "load_hits", "cache_stats",
 )
 
 
@@ -116,9 +123,14 @@ class PlanReport:
         b_fetches: int,
         block_omar: float,
         schedule_builds: int = 1,  # symbolic-phase runs for this plan (0
-        # when a pre-built schedule was supplied, else 1)
+        # when a pre-built schedule was supplied or the plan was loaded
+        # from the disk tier, else 1)
         cache_hits: int = 0,  # times this plan was served from a PlanCache
         executes: int = 0,  # numeric-phase runs (value sets, for batches)
+        loads: int = 0,  # disk-tier deserializations that built this plan
+        # object (1 on a warm restart, 0 on a cold build)
+        load_hits: int = 0,  # plan-cache lookups this plan satisfied from
+        # the disk tier (the warm-restart acceptance counter)
         cache_stats: Optional[dict] = None,  # serving PlanCache.stats()
         # snapshot, refreshed on every spgemm_plan lookup for this plan
     ):
@@ -139,6 +151,8 @@ class PlanReport:
         self.schedule_builds = schedule_builds
         self.cache_hits = cache_hits
         self.executes = executes
+        self.loads = loads
+        self.load_hits = load_hits
         self.cache_stats = cache_stats
 
     @property
@@ -208,6 +222,7 @@ class SpGEMMPlan:
         b_scatter: Optional[np.ndarray] = None,
         a_pattern: Optional[COO] = None,
         b_pattern: Optional[COO] = None,
+        assembly: Optional[AssemblyMap] = None,
     ):
         self.schedule = schedule
         self.backend = backend
@@ -229,10 +244,12 @@ class SpGEMMPlan:
         self._bm = int(a_blocks.shape[1]) if a_blocks.ndim == 3 else 0
         self._bn = int(b_blocks.shape[2]) if b_blocks.ndim == 3 else 0
         # Symbolic output structure: C's CSR pattern + the panels->CSR
-        # gather map. Computed here (plan build), consumed on device by the
-        # executor — the numeric phase never scans values for structure.
-        self.assembly: AssemblyMap = build_assembly_map(
-            schedule, (self._bm, self._bn), out_shape
+        # gather map. Computed here (plan build) unless rehydrated from
+        # persisted artifacts, consumed on device by the executor — the
+        # numeric phase never scans values for structure.
+        self.assembly: AssemblyMap = (
+            assembly if assembly is not None
+            else build_assembly_map(schedule, (self._bm, self._bn), out_shape)
         )
         # Device-resident numeric executor: schedule + scatter + gather
         # staged to device once; runs the fused rebind/kernel/assembly jit.
@@ -336,6 +353,158 @@ class SpGEMMPlan:
         )
         report._nnz_a = _staged_nnz(plan, "_a_blocks", "nnz_a")
         report._nnz_b = _staged_nnz(plan, "_b_blocks", "nnz_b")
+        return plan
+
+    # -- persistence (the disk tier's codec endpoints) --------------------
+
+    def persist_artifacts(self) -> Tuple[dict, dict]:
+        """The plan's value-independent symbolic artifacts as
+        ``(arrays, meta)`` — the payload the disk tier
+        (:class:`repro.spgemm.persist.PlanStore`) writes once per cache
+        key.
+
+        ``arrays`` holds only what the symbolic phase computed: the triple
+        schedule, the assembly map, and the value-scatter indices (element
+        plans; :class:`ShardedSpGEMMPlan` adds its shard bounds). ``meta``
+        holds the padding/geometry scalars (packed block-array shapes and
+        dtypes, true output shape, tile/group, backend). Values are
+        deliberately excluded — a warm restart brings its own.
+        """
+        arrays = {}
+        arrays.update(schedule_to_arrays(self.schedule))
+        arrays.update(assembly_to_arrays(self.assembly))
+        if self._a_scatter is not None:
+            arrays["a_scatter"] = self._a_scatter
+        if self._b_scatter is not None:
+            arrays["b_scatter"] = self._b_scatter
+        element = self._a_scatter is not None and self._b_scatter is not None
+        meta = {
+            "kind": "element" if element else "block",
+            "backend": self.backend,
+            "out_shape": [self._m, self._n],
+            "a_shape": list(self._a_shape),
+            "b_shape": list(self._b_shape),
+            "a_dtype": str(self._a_dtype),
+            "b_dtype": str(self._b_dtype),
+            "tile": list(self.report.tile),
+            "group": self.report.group,
+        }
+        return arrays, meta
+
+    @classmethod
+    def from_artifacts(
+        cls,
+        arrays: dict,
+        meta: dict,
+        *,
+        backend: str,
+        pattern_key: Union[str, Callable[[], str]] = "",
+        a_vals=None,
+        b_vals=None,
+        a_blocks: Optional[np.ndarray] = None,
+        b_blocks: Optional[np.ndarray] = None,
+        a_pattern: Optional[COO] = None,
+        b_pattern: Optional[COO] = None,
+        mesh: Optional[Mesh] = None,
+        mesh_axis: Optional[str] = None,
+    ) -> "SpGEMMPlan":
+        """Rehydrate a plan from persisted artifacts + this call's values.
+
+        The inverse of :meth:`persist_artifacts`: the symbolic phase is
+        **not** re-run (``report.schedule_builds == 0``); the packed block
+        arrays are rebuilt by scattering the caller's ``a_vals``/``b_vals``
+        through the persisted scatter indices (element plans) or taken
+        directly from ``a_blocks``/``b_blocks`` (block plans). Any
+        inconsistency between artifacts and inputs raises — the cache
+        treats that as an unusable entry and falls back to a cold build.
+        """
+        backend = resolve_backend(backend)
+        kind = meta.get("kind")
+        if kind not in ("element", "block"):
+            raise ValueError(f"unknown persisted plan kind {kind!r}")
+        if meta.get("backend") != backend:
+            raise ValueError(
+                f"persisted backend {meta.get('backend')!r} != {backend!r}"
+            )
+        schedule = schedule_from_arrays(arrays)
+        assembly = assembly_from_arrays(arrays)
+        a_shape = tuple(int(x) for x in meta["a_shape"])
+        b_shape = tuple(int(x) for x in meta["b_shape"])
+        a_dtype = np.dtype(meta["a_dtype"])
+        b_dtype = np.dtype(meta["b_dtype"])
+        out_shape = tuple(int(x) for x in meta["out_shape"])
+        tile = tuple(int(x) for x in meta["tile"])
+        group = int(meta["group"])
+        a_scatter = arrays.get("a_scatter")
+        b_scatter = arrays.get("b_scatter")
+
+        def rebuild(vals, scatter, shape, dtype, name):
+            if scatter is None:
+                raise ValueError(f"{name}: persisted scatter missing")
+            vals = np.asarray(vals)
+            scatter = np.asarray(scatter)
+            if vals.shape != (int(scatter.shape[0]),):
+                raise ValueError(
+                    f"{name}: {vals.shape} values vs persisted scatter "
+                    f"of {int(scatter.shape[0])}"
+                )
+            blocks = np.zeros(shape, dtype)
+            blocks.reshape(-1)[scatter] = vals.astype(dtype, copy=False)
+            return blocks
+
+        if kind == "element":
+            if a_vals is None or b_vals is None:
+                raise ValueError("element plan needs a_vals/b_vals")
+            a_blocks = rebuild(a_vals, a_scatter, a_shape, a_dtype, "a_vals")
+            b_blocks = rebuild(b_vals, b_scatter, b_shape, b_dtype, "b_vals")
+            nnz_a = int(np.asarray(a_scatter).shape[0])
+            nnz_b = int(np.asarray(b_scatter).shape[0])
+        else:
+            if a_blocks is None or b_blocks is None:
+                raise ValueError("block plan needs a_blocks/b_blocks")
+            a_blocks = np.asarray(a_blocks)
+            b_blocks = np.asarray(b_blocks)
+            if tuple(a_blocks.shape) != a_shape or a_blocks.dtype != a_dtype:
+                raise ValueError(
+                    f"a_blocks {a_blocks.shape}/{a_blocks.dtype} vs "
+                    f"persisted {a_shape}/{a_dtype}"
+                )
+            if tuple(b_blocks.shape) != b_shape or b_blocks.dtype != b_dtype:
+                raise ValueError(
+                    f"b_blocks {b_blocks.shape}/{b_blocks.dtype} vs "
+                    f"persisted {b_shape}/{b_dtype}"
+                )
+            nnz_a = nnz_b = 0  # bound to staged blocks below (lazy)
+        report = _make_report(
+            pattern_key, tile, group, backend, out_shape,
+            nnz_a, nnz_b, a_shape[0] if a_blocks.ndim == 3 else 0,
+            b_shape[0] if b_blocks.ndim == 3 else 0, schedule,
+        )
+        report.schedule_builds = 0
+        report.loads = 1
+        report.load_hits = 1
+        plan_cls, extra = _resolve_plan_cls(mesh, mesh_axis)
+        if mesh is not None and "shard_bounds" in arrays:
+            extra["shards"] = shards_from_bounds(
+                schedule, arrays["shard_bounds"]
+            )
+        plan = plan_cls(
+            schedule=schedule,
+            a_blocks=a_blocks,
+            b_blocks=b_blocks,
+            backend=backend,
+            out_shape=out_shape,
+            report=report,
+            a_scatter=None if a_scatter is None else np.asarray(a_scatter),
+            b_scatter=None if b_scatter is None else np.asarray(b_scatter),
+            a_pattern=a_pattern,
+            b_pattern=b_pattern,
+            assembly=assembly,
+            **extra,
+        )
+        if kind == "block":
+            report._nnz_a = _staged_nnz(plan, "_a_blocks", "nnz_a")
+            report._nnz_b = _staged_nnz(plan, "_b_blocks", "nnz_b")
         return plan
 
     # -- numeric phase ----------------------------------------------------
@@ -565,7 +734,14 @@ class ShardedSpGEMMPlan(SpGEMMPlan):
     precomputed indptr boundaries.
     """
 
-    def __init__(self, *, mesh: Mesh, mesh_axis: Optional[str] = None, **kw):
+    def __init__(
+        self,
+        *,
+        mesh: Mesh,
+        mesh_axis: Optional[str] = None,
+        shards: Optional[List[ScheduleShard]] = None,
+        **kw,
+    ):
         if mesh_axis is None:
             mesh_axis = mesh.axis_names[0]
         if mesh_axis not in mesh.axis_names:
@@ -575,12 +751,26 @@ class ShardedSpGEMMPlan(SpGEMMPlan):
         self.mesh = mesh
         self.mesh_axis = mesh_axis
         self.n_shards = int(mesh.shape[mesh_axis])
+        # ``shards`` is the persistence seam: a rehydrated plan passes the
+        # deserialized partition here so _make_executor skips the
+        # partitioner along with the rest of the symbolic phase.
+        self._preloaded_shards = shards
         self._shards: List[ScheduleShard] = []
         self._shard_assemblies: List[AssemblyMap] = []
         super().__init__(**kw)
 
     def _make_executor(self):
-        self._shards = partition_spgemm_schedule(self.schedule, self.n_shards)
+        if self._preloaded_shards is not None:
+            if len(self._preloaded_shards) != self.n_shards:
+                raise ValueError(
+                    f"{len(self._preloaded_shards)} persisted shards for "
+                    f"a {self.n_shards}-device mesh axis"
+                )
+            self._shards = self._preloaded_shards
+        else:
+            self._shards = partition_spgemm_schedule(
+                self.schedule, self.n_shards
+            )
         bm, bn, g = self._bm, self._bn, self._group
         for sh in self._shards:
             row_lo = min(sh.group_lo * g * bm, self._m)
@@ -644,6 +834,20 @@ class ShardedSpGEMMPlan(SpGEMMPlan):
         return super().host_nbytes() + sum(
             a.nbytes() for a in self._shard_assemblies
         )
+
+    def persist_artifacts(self) -> Tuple[dict, dict]:
+        """Adds the shard partition to the base artifacts: the group-bound
+        vector alone reconstructs every :class:`ScheduleShard` slice
+        bitwise (see :func:`repro.core.schedule.shards_from_bounds`), so
+        per-shard executors rebuild from deserialized constants without
+        re-running the partitioner. Empty plans (no executor, no shards)
+        persist without bounds and re-partition trivially on load."""
+        arrays, meta = super().persist_artifacts()
+        if self._shards:
+            arrays["shard_bounds"] = shards_to_bounds(self._shards)
+        meta["n_shards"] = self.n_shards
+        meta["mesh_axis"] = self.mesh_axis
+        return arrays, meta
 
 
 def _resolve_plan_cls(mesh: Optional[Mesh], mesh_axis: Optional[str]):
@@ -766,7 +970,13 @@ def spgemm_plan(
         plan, hit = cache.get_or_build(
             key, lambda: SpGEMMPlan.from_blocks(
                 a, b, backend=backend, pattern_key=key[0],
-                mesh=mesh, mesh_axis=mesh_axis)
+                mesh=mesh, mesh_axis=mesh_axis),
+            # Disk tier (warm restart): rehydrate the persisted symbolic
+            # artifacts with this call's packed blocks as the values.
+            loader=lambda arrays, meta: SpGEMMPlan.from_artifacts(
+                arrays, meta, backend=backend, pattern_key=key[0],
+                a_blocks=a.blocks, b_blocks=b.blocks,
+                mesh=mesh, mesh_axis=mesh_axis),
         )
         plan.report.cache_stats = cache.stats()
         if hit:
@@ -822,7 +1032,17 @@ def spgemm_plan(
             **extra,
         )
 
-    plan, hit = cache.get_or_build(key, build)
+    def load(arrays: dict, meta: dict) -> SpGEMMPlan:
+        # Disk tier (warm restart): the symbolic artifacts come from the
+        # store, the values from this call's (already canonicalized) COOs.
+        return SpGEMMPlan.from_artifacts(
+            arrays, meta, backend=backend, pattern_key=pattern,
+            a_vals=a_coo.val, b_vals=b_coo.val,
+            a_pattern=a_coo, b_pattern=b_coo,
+            mesh=mesh, mesh_axis=mesh_axis,
+        )
+
+    plan, hit = cache.get_or_build(key, build, loader=load)
     plan.report.cache_stats = cache.stats()
     if hit:
         with plan._lock:

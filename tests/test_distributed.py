@@ -11,7 +11,7 @@ class TestMeshAndSharding:
             from jax.sharding import NamedSharding, PartitionSpec as P
             from repro.configs.registry import get_reduced
             from repro.models import transformer as tr
-            from repro.launch.mesh import make_host_mesh
+            from repro.launch.mesh import make_auto_mesh, make_host_mesh
             from repro.launch.sharding import default_rules, use_rules, divisible_sharding
             from repro.optim import AdamW
             from repro.runtime.steps import make_train_step
@@ -29,9 +29,9 @@ class TestMeshAndSharding:
             p1, o1, m1 = step(params, opt_state,
                               {k: jnp.asarray(v) for k, v in batch.items()})
 
-            # 4x2 mesh (data x model)
-            mesh = jax.make_mesh((4, 2), ('data', 'model'),
-                                 axis_types=(jax.sharding.AxisType.Auto,)*2)
+            # 4x2 mesh (data x model); make_auto_mesh shims axis_types
+            # (jax.sharding.AxisType is absent on older jax).
+            mesh = make_auto_mesh((4, 2), ('data', 'model'))
             rules = default_rules(mesh, n_kv_heads=cfg.n_kv_heads,
                                   n_experts=cfg.n_experts)
             with use_rules(mesh, rules):
@@ -58,6 +58,7 @@ class TestMeshAndSharding:
             import jax, jax.numpy as jnp, numpy as np
             from repro.configs.registry import get_reduced
             from repro.models import transformer as tr
+            from repro.launch.mesh import make_auto_mesh
             from repro.launch.sharding import default_rules, use_rules, divisible_sharding
             # High capacity: near-tie top-k routing can legitimately flip
             # under sharded reduction ordering; with ample capacity the
@@ -68,8 +69,7 @@ class TestMeshAndSharding:
             toks = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0, cfg.vocab)
             ref_logits, ref_aux = tr.forward(params, cfg, tokens=toks)
 
-            mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                                 axis_types=(jax.sharding.AxisType.Auto,)*2)
+            mesh = make_auto_mesh((2, 4), ('data', 'model'))
             rules = default_rules(mesh, n_kv_heads=cfg.n_kv_heads,
                                   n_experts=cfg.n_experts)
             with use_rules(mesh, rules):
@@ -95,9 +95,9 @@ class TestMeshAndSharding:
         _run(f"""
             import jax, jax.numpy as jnp
             from repro.checkpoint.manager import CheckpointManager
+            from repro.launch.mesh import make_auto_mesh
             from jax.sharding import NamedSharding, PartitionSpec as P
-            mesh = jax.make_mesh((8,), ('data',),
-                                 axis_types=(jax.sharding.AxisType.Auto,))
+            mesh = make_auto_mesh((8,), ('data',))
             w = jax.device_put(jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
                                NamedSharding(mesh, P('data', None)))
             CheckpointManager({tmp!r}).save(1, {{'w': w}})
@@ -106,9 +106,9 @@ class TestMeshAndSharding:
             out = _run(f"""
                 import jax, jax.numpy as jnp, numpy as np
                 from repro.checkpoint.manager import CheckpointManager
+                from repro.launch.mesh import make_auto_mesh
                 from jax.sharding import NamedSharding, PartitionSpec as P
-                mesh = jax.make_mesh(({ndev},), ('data',),
-                                     axis_types=(jax.sharding.AxisType.Auto,))
+                mesh = make_auto_mesh(({ndev},), ('data',))
                 like = {{'w': jnp.zeros((8, 8), jnp.float32)}}
                 sh = {{'w': NamedSharding(mesh, P('data', None))}}
                 out = CheckpointManager({tmp!r}).restore(1, like, shardings=sh)

@@ -1,0 +1,429 @@
+"""Persistent on-disk plan cache (warm-restart SpGEMM).
+
+Three layers of coverage:
+
+* the flat-array codecs in ``repro.core.schedule`` are bitwise round-trips
+  (schedule, assembly map, shard partition);
+* the :class:`~repro.spgemm.persist.PlanStore` file format is integrity
+  checked — corrupted, version-bumped, wrong-digest, and cross-key files
+  all degrade to a miss (and a fresh symbolic build), never an error or a
+  wrong plan;
+* warm restarts (a fresh :class:`PlanCache` on a populated directory, and
+  a genuinely fresh *process* via the ``forced_devices`` subprocess
+  helper) skip the symbolic phase — ``report.schedule_builds == 0``,
+  ``report.load_hits >= 1`` — and produce results bitwise-equal to a
+  cold-built plan on the element, block, batched, and sharded (1/2/4/8)
+  paths.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.schedule import (
+    assembly_from_arrays,
+    assembly_to_arrays,
+    build_assembly_map,
+    build_spgemm_schedule,
+    partition_spgemm_schedule,
+    schedule_from_arrays,
+    schedule_to_arrays,
+    shards_from_bounds,
+    shards_to_bounds,
+)
+from repro.sparse.convert import bcsr_from_coo, bcsv_from_coo, to_bcsr, to_bcsv
+from repro.sparse.formats import COO
+from repro.sparse.random import random_block_sparse, random_coo, suite_matrix
+from repro.spgemm import PlanCache, spgemm_plan
+from repro.spgemm import persist
+from repro.spgemm.persist import PlanStore
+
+
+def _int_coo(m, n, density, seed):
+    """Small-integer float32 values: exact under any accumulation order,
+    so cold-vs-warm comparisons can demand bitwise equality."""
+    coo = random_coo(m, n, density, "uniform", seed=seed)
+    rng = np.random.default_rng(seed + 999)
+    vals = rng.integers(-4, 5, coo.nnz).astype(np.float32)
+    coo.val = np.where(vals == 0, np.float32(1.0), vals)
+    return coo
+
+
+def _schedule(seed=3, shape=(140, 100), tile=8, group=2):
+    a = _int_coo(shape[0], shape[1], 0.07, seed)
+    b = COO(a.col, a.row, a.val, (shape[1], shape[0]))
+    a_bcsv, _ = bcsv_from_coo(a, (tile, tile), group)
+    b_bcsr, _ = bcsr_from_coo(b, (tile, tile))
+    return build_spgemm_schedule(a_bcsv, b_bcsr)
+
+
+def _assert_schedules_equal(s1, s2):
+    for f in ("a_slot", "b_slot", "panel", "sub_row", "start",
+              "panel_group", "panel_bcol", "c_brow", "c_bcol"):
+        a1, a2 = getattr(s1, f), getattr(s2, f)
+        assert a1.dtype == a2.dtype and np.array_equal(a1, a2), f
+    for f in ("group", "grid_m", "grid_n", "grid_k"):
+        assert getattr(s1, f) == getattr(s2, f), f
+
+
+class TestCodecs:
+    def test_schedule_roundtrip_bitwise(self):
+        sch = _schedule()
+        back = schedule_from_arrays(schedule_to_arrays(sch))
+        _assert_schedules_equal(sch, back)
+
+    def test_assembly_roundtrip_bitwise(self):
+        sch = _schedule()
+        asm = build_assembly_map(sch, (8, 8), (140, 140))
+        back = assembly_from_arrays(assembly_to_arrays(asm))
+        assert back.gather.dtype == asm.gather.dtype
+        assert np.array_equal(back.gather, asm.gather)
+        assert np.array_equal(back.indptr, asm.indptr)
+        assert np.array_equal(back.indices, asm.indices)
+        assert back.shape == asm.shape
+
+    @pytest.mark.parametrize("n_shards", [1, 2, 3, 8])
+    def test_shard_bounds_roundtrip_bitwise(self, n_shards):
+        """The group-bound vector alone reconstructs every shard slice."""
+        sch = _schedule()
+        shards = partition_spgemm_schedule(sch, n_shards)
+        back = shards_from_bounds(sch, shards_to_bounds(shards))
+        assert len(back) == len(shards)
+        for s1, s2 in zip(shards, back):
+            for f in ("group_lo", "group_hi", "triple_lo", "triple_hi",
+                      "panel_lo", "panel_hi", "a_lo", "a_hi"):
+                assert getattr(s1, f) == getattr(s2, f), f
+            _assert_schedules_equal(s1.schedule, s2.schedule)
+
+    def test_bad_bounds_raise(self):
+        sch = _schedule()
+        with pytest.raises(ValueError):
+            shards_from_bounds(sch, np.asarray([0, 3, 2], np.int64))
+        with pytest.raises(ValueError):
+            shards_from_bounds(sch, np.asarray([1, 2], np.int64))
+        with pytest.raises(ValueError):  # does not cover all groups
+            shards_from_bounds(sch, np.asarray([0, 1], np.int64))
+
+
+class TestPlanStore:
+    KEY = ("pat", (8, 8, 8), 2, "jnp", None)
+
+    def _arrays(self):
+        return {"x": np.arange(7, dtype=np.int32),
+                "y": np.linspace(0, 1, 5, dtype=np.float64)}
+
+    def test_save_load_roundtrip(self, tmp_path):
+        store = PlanStore(str(tmp_path))
+        meta = {"kind": "element", "group": 2}
+        assert store.save(self.KEY, self._arrays(), meta) is not None
+        out = store.load(self.KEY)
+        assert out is not None
+        arrays, got_meta = out
+        assert got_meta == meta
+        for k, v in self._arrays().items():
+            assert arrays[k].dtype == v.dtype and np.array_equal(arrays[k], v)
+        assert self.KEY in store and len(store) == 1
+
+    def test_missing_is_none(self, tmp_path):
+        assert PlanStore(str(tmp_path)).load(self.KEY) is None
+
+    def test_corrupted_file_is_miss_and_removed(self, tmp_path):
+        store = PlanStore(str(tmp_path))
+        store.save(self.KEY, self._arrays(), {})
+        path = store.path_for(self.KEY)
+        with open(path, "r+b") as f:
+            f.seek(30)
+            f.write(b"\xde\xad\xbe\xef" * 8)
+        assert store.load(self.KEY) is None
+        assert not os.path.exists(path), "corrupt file should be dropped"
+
+    def test_version_bump_is_miss(self, tmp_path, monkeypatch):
+        store = PlanStore(str(tmp_path))
+        store.save(self.KEY, self._arrays(), {})
+        monkeypatch.setattr(persist, "FORMAT_VERSION",
+                            persist.FORMAT_VERSION + 1)
+        assert store.load(self.KEY) is None
+
+    def test_wrong_digest_is_miss(self, tmp_path):
+        """A well-formed file whose payload no longer matches its header
+        digest (silent bit rot / partial overwrite) must be a miss."""
+        store = PlanStore(str(tmp_path))
+        store.save(self.KEY, self._arrays(), {})
+        path = store.path_for(self.KEY)
+        with np.load(path, allow_pickle=False) as z:
+            payload = {n: z[n] for n in z.files}
+        payload["x"] = payload["x"] + 1  # tamper; header digest kept
+        with open(path, "wb") as f:
+            np.savez(f, **payload)
+        assert store.load(self.KEY) is None
+
+    def test_tampered_meta_is_miss(self, tmp_path):
+        """The header meta (geometry, dtypes, kind) is inside the payload
+        digest: a parseable-but-tampered JSON header must be a miss."""
+        store = PlanStore(str(tmp_path))
+        store.save(self.KEY, self._arrays(), {"group": 2})
+        path = store.path_for(self.KEY)
+        with np.load(path, allow_pickle=False) as z:
+            payload = {n: z[n] for n in z.files}
+        header = json.loads(bytes(np.asarray(payload["__meta__"])).decode())
+        header["meta"]["group"] = 4  # digest left untouched
+        payload["__meta__"] = np.frombuffer(
+            json.dumps(header).encode(), np.uint8)
+        with open(path, "wb") as f:
+            np.savez(f, **payload)
+        assert store.load(self.KEY) is None
+
+    def test_stale_tmp_files_are_collected(self, tmp_path):
+        """An orphaned *.tmp (writer crashed mid-save) is deleted by the
+        next store construction once it is old enough."""
+        stray = tmp_path / (persist.plan_file_name(self.KEY) + ".123.4.tmp")
+        stray.write_bytes(b"half-written")
+        old = os.path.getmtime(str(stray)) - 7200
+        os.utime(str(stray), (old, old))
+        PlanStore(str(tmp_path))
+        assert not stray.exists()
+        # A fresh tmp (another process mid-write) is spared...
+        stray.write_bytes(b"in-flight")
+        store = PlanStore(str(tmp_path))
+        assert stray.exists()
+        # ...but clear() drops everything.
+        store.clear()
+        assert not stray.exists()
+
+    def test_cross_key_file_is_miss(self, tmp_path):
+        """A valid file renamed onto another key's slot (or a filename
+        digest collision) must not serve the wrong plan."""
+        store = PlanStore(str(tmp_path))
+        other = ("other-pattern",) + self.KEY[1:]
+        store.save(self.KEY, self._arrays(), {})
+        os.replace(store.path_for(self.KEY), store.path_for(other))
+        assert store.load(other) is None
+
+    def test_byte_budget_evicts_oldest(self, tmp_path):
+        store = PlanStore(str(tmp_path))
+        store.save(("k1",), self._arrays(), {})
+        size = store.total_bytes()
+        store.max_bytes = int(size * 2.5)  # room for two files
+        store.load(("k1",))  # refresh k1's recency
+        store.save(("k2",), self._arrays(), {})
+        store.save(("k3",), self._arrays(), {})
+        assert store.evictions >= 1
+        assert store.total_bytes() <= store.max_bytes
+        assert ("k3",) in store, "just-written file must survive eviction"
+
+
+class TestWarmRestart:
+    """Fresh PlanCache instances over one directory model the restart;
+    TestWarmRestartProcess does it with real processes."""
+
+    def _mats(self, seed=11):
+        a = _int_coo(120, 90, 0.08, seed)
+        b = COO(a.col, a.row, a.val, (90, 120))
+        return a, b
+
+    @pytest.mark.parametrize("backend", ["jnp", "pallas_interpret"])
+    def test_element_warm_start_bitwise(self, tmp_path, backend):
+        a, b = self._mats()
+        cold_cache = PlanCache(disk_dir=str(tmp_path))
+        cold = spgemm_plan(a, b, tile=8, group=2, backend=backend,
+                           cache=cold_cache)
+        c_cold = cold.execute()
+        assert cold.report.schedule_builds == 1
+        assert cold.report.loads == 0
+        assert cold_cache.stats.stores == 1
+
+        warm_cache = PlanCache(disk_dir=str(tmp_path))
+        warm = spgemm_plan(a, b, tile=8, group=2, backend=backend,
+                           cache=warm_cache)
+        assert warm is not cold
+        assert warm.report.schedule_builds == 0
+        assert warm.report.loads == 1 and warm.report.load_hits >= 1
+        assert warm_cache.stats.disk_hits == 1
+        c_warm = warm.execute()
+        assert np.array_equal(c_cold.indptr, c_warm.indptr)
+        assert np.array_equal(c_cold.indices, c_warm.indices)
+        assert np.array_equal(c_cold.data, c_warm.data)
+        # Fresh values through the fused path, still bitwise-equal.
+        av = np.asarray(warm.a_pattern.val) * 2.0
+        bv = np.asarray(warm.b_pattern.val) * 3.0
+        assert np.array_equal(cold.execute(av, bv).data,
+                              warm.execute(av, bv).data)
+
+    def test_batched_warm_start_bitwise(self, tmp_path):
+        a, b = self._mats(21)
+        cold = spgemm_plan(a, b, tile=8, group=2, backend="jnp",
+                           cache=PlanCache(disk_dir=str(tmp_path)))
+        rng = np.random.default_rng(5)
+        av = rng.integers(-3, 4, (4, a.nnz)).astype(np.float32)
+        bv = rng.integers(-3, 4, (4, b.nnz)).astype(np.float32)
+        cb_cold = cold.execute_batch(av, bv)
+        warm = spgemm_plan(a, b, tile=8, group=2, backend="jnp",
+                           cache=PlanCache(disk_dir=str(tmp_path)))
+        assert warm.report.schedule_builds == 0
+        cb_warm = warm.execute_batch(av, bv)
+        for c1, c2 in zip(cb_cold, cb_warm):
+            assert np.array_equal(c1.data, c2.data)
+            assert np.array_equal(c1.indptr, c2.indptr)
+
+    def test_block_warm_start_bitwise(self, tmp_path):
+        ad = random_block_sparse(96, 96, (16, 16), 0.4, seed=31)
+        bd = random_block_sparse(96, 96, (16, 16), 0.4, seed=32)
+        ab, bb = to_bcsv(ad, (16, 16), 2), to_bcsr(bd, (16, 16))
+        cold = spgemm_plan(ab, bb, backend="jnp",
+                           cache=PlanCache(disk_dir=str(tmp_path)))
+        c_cold = cold.execute()
+        warm = spgemm_plan(ab, bb, backend="jnp",
+                           cache=PlanCache(disk_dir=str(tmp_path)))
+        assert warm.report.schedule_builds == 0
+        assert warm.report.load_hits >= 1
+        c_warm = warm.execute()
+        assert np.array_equal(c_cold.data, c_warm.data)
+        # Lazy nnz report fields still resolve on the loaded plan.
+        assert warm.report.nnz_a == cold.report.nnz_a
+
+    def test_sharded_warm_start_single_device(self, tmp_path):
+        from repro.launch.mesh import make_shard_mesh
+        from repro.spgemm import ShardedSpGEMMPlan
+
+        a, b = self._mats(41)
+        mesh = make_shard_mesh(1)
+        cold = spgemm_plan(a, b, tile=8, group=2, backend="jnp",
+                           cache=PlanCache(disk_dir=str(tmp_path)),
+                           mesh=mesh)
+        c_cold = cold.execute()
+        warm = spgemm_plan(a, b, tile=8, group=2, backend="jnp",
+                           cache=PlanCache(disk_dir=str(tmp_path)),
+                           mesh=mesh)
+        assert isinstance(warm, ShardedSpGEMMPlan)
+        assert warm.report.schedule_builds == 0
+        assert warm.shard_stats() == cold.shard_stats()
+        assert np.array_equal(c_cold.data, warm.execute().data)
+
+    def test_corrupt_entry_falls_back_to_build(self, tmp_path):
+        a, b = self._mats(51)
+        spgemm_plan(a, b, tile=8, group=2, backend="jnp",
+                    cache=PlanCache(disk_dir=str(tmp_path)))
+        store = PlanStore(str(tmp_path))
+        (path,) = store.files()
+        with open(path, "r+b") as f:
+            f.seek(40)
+            f.write(b"garbage!" * 16)
+        cache = PlanCache(disk_dir=str(tmp_path))
+        plan = spgemm_plan(a, b, tile=8, group=2, backend="jnp", cache=cache)
+        assert plan.report.schedule_builds == 1  # silent rebuild
+        assert plan.report.loads == 0
+        assert cache.stats.disk_misses == 1
+        # ...and the rebuild re-populated the store for the next restart.
+        assert cache.stats.stores == 1
+        warm = spgemm_plan(a, b, tile=8, group=2, backend="jnp",
+                           cache=PlanCache(disk_dir=str(tmp_path)))
+        assert warm.report.schedule_builds == 0
+
+    def test_loader_rejection_falls_back_to_build(self, tmp_path, monkeypatch):
+        """A verified file whose content the rehydrator rejects (here: a
+        future plan kind) silently rebuilds."""
+        a, b = self._mats(61)
+        spgemm_plan(a, b, tile=8, group=2, backend="jnp",
+                    cache=PlanCache(disk_dir=str(tmp_path)))
+        store = PlanStore(str(tmp_path))
+        key_path = store.files()[0]
+        with np.load(key_path, allow_pickle=False) as z:
+            payload = {n: z[n] for n in z.files}
+        header = json.loads(bytes(np.asarray(payload["__meta__"])).decode())
+        header["meta"]["kind"] = "from-the-future"
+        arrays = {n: v for n, v in payload.items() if n != "__meta__"}
+        header["digest"] = persist._payload_digest(arrays, header["meta"])
+        payload["__meta__"] = np.frombuffer(
+            json.dumps(header).encode(), np.uint8)
+        with open(key_path, "wb") as f:
+            np.savez(f, **payload)
+        cache = PlanCache(disk_dir=str(tmp_path))
+        plan = spgemm_plan(a, b, tile=8, group=2, backend="jnp", cache=cache)
+        assert plan.report.schedule_builds == 1
+        assert cache.stats.load_failures == 1
+
+    def test_memory_tier_still_wins(self, tmp_path):
+        """Within one process the memory tier serves repeat lookups; disk
+        is only consulted on memory misses."""
+        a, b = self._mats(71)
+        cache = PlanCache(disk_dir=str(tmp_path))
+        p1 = spgemm_plan(a, b, tile=8, group=2, backend="jnp", cache=cache)
+        p2 = spgemm_plan(a, b, tile=8, group=2, backend="jnp", cache=cache)
+        assert p1 is p2
+        assert cache.stats.hits == 1 and cache.stats.disk_hits == 0
+
+    def test_no_disk_dir_keeps_old_behavior(self):
+        a, b = self._mats(81)
+        cache = PlanCache()
+        assert cache.store is None
+        plan = spgemm_plan(a, b, tile=8, group=2, backend="jnp", cache=cache)
+        assert plan.report.schedule_builds == 1
+        s = cache.stats()
+        assert s["disk_hits"] == 0 and s["stores"] == 0
+        assert "disk_files" not in s
+
+
+WARM_COLD_PROCESS = """
+import hashlib, os
+import numpy as np
+from repro.sparse.formats import COO
+from repro.sparse.random import suite_matrix
+from repro.launch.mesh import make_shard_mesh
+from repro.spgemm import default_cache, spgemm_plan
+
+assert os.environ["REPRO_SPGEMM_PLAN_DIR"]  # disk tier via env, no code
+WARM = {warm}
+rng = np.random.default_rng(0)
+digests = []
+for name, scale in (("poisson3Da", 0.004), ("cage12", 0.004)):
+    a = suite_matrix(name, scale=scale).to_coo().sum_duplicates()
+    v = rng.integers(-4, 5, a.nnz).astype(np.float32)
+    a.val = np.where(v == 0, np.float32(1.0), v)
+    b = COO(a.col, a.row, a.val, (a.shape[1], a.shape[0]))
+    av = rng.integers(-3, 4, (3, a.nnz)).astype(np.float32)
+    bv = rng.integers(-3, 4, (3, b.nnz)).astype(np.float32)
+    for n in (None, 1, 2, 4, 8):
+        mesh = None if n is None else make_shard_mesh(n)
+        plan = spgemm_plan(a, b, tile=16, group=2, backend="jnp", mesh=mesh)
+        rep = plan.report
+        if WARM:
+            assert rep.schedule_builds == 0, (name, n, "symbolic phase ran")
+            assert rep.loads == 1 and rep.load_hits >= 1, (name, n)
+        else:
+            assert rep.schedule_builds == 1, (name, n)
+        c = plan.execute()
+        cb = plan.execute_batch(av, bv)
+        h = hashlib.blake2b(digest_size=12)
+        for arr in (c.indptr, c.indices, c.data, *(x.data for x in cb)):
+            h.update(np.ascontiguousarray(arr).tobytes())
+        digests.append(f"{{name}}:{{n}}:{{h.hexdigest()}}")
+stats = default_cache().stats()
+if WARM:
+    assert stats["disk_hits"] == len(digests), stats
+else:
+    assert stats["stores"] == len(digests), stats
+print("RESULT " + ";".join(digests))
+"""
+
+
+class TestWarmRestartProcess:
+    def test_second_process_skips_symbolic_phase(self, tmp_path,
+                                                 forced_devices):
+        """The acceptance scenario: process 1 builds plans (element +
+        sharded 1/2/4/8 on paper matrices) under REPRO_SPGEMM_PLAN_DIR;
+        process 2 — a genuinely fresh interpreter — loads every one of
+        them (schedule_builds == 0, load_hits >= 1) and its execute /
+        execute_batch results are bitwise-identical to process 1's."""
+        os.environ["REPRO_SPGEMM_PLAN_DIR"] = str(tmp_path)
+        try:
+            cold = forced_devices(
+                WARM_COLD_PROCESS.format(warm=False), devices=8)
+            assert len(PlanStore(str(tmp_path)).files()) == 10
+            warm = forced_devices(
+                WARM_COLD_PROCESS.format(warm=True), devices=8)
+        finally:
+            del os.environ["REPRO_SPGEMM_PLAN_DIR"]
+        get = lambda out: [ln for ln in out.splitlines()
+                           if ln.startswith("RESULT ")][0]
+        assert get(cold) == get(warm), "warm results diverged from cold"

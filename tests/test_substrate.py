@@ -146,11 +146,11 @@ class TestCheckpoint:
     def test_elastic_reshard_on_load(self, tmp_path):
         """Checkpoints restore onto a different sharding layout."""
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import make_auto_mesh
         mgr = CheckpointManager(str(tmp_path), keep=1)
         tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
         mgr.save(1, tree)
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_auto_mesh((1,), ("data",))
         sh = {"w": NamedSharding(mesh, P("data", None))}
         out = mgr.restore(1, tree, shardings=sh)
         assert out["w"].sharding == sh["w"]
