@@ -37,7 +37,7 @@ _SHARDED_CASES = (
 )
 
 
-def run(quiet: bool = False, devices: int = 0):
+def run(quiet: bool = False, devices: int = 0, pipeline_depths=(1, 2, 4)):
     print("kernels,case,triples,b_fetches,block_omar_pct,flops,"
           "bytes_streamed,arith_intensity,plan_ms,execute_ms")
     for (m, k, n, da, db, g) in [
@@ -145,6 +145,9 @@ def run(quiet: bool = False, devices: int = 0):
 
     _persistence_section()
 
+    if pipeline_depths:
+        _pipeline_section(pipeline_depths)
+
     if devices > 1:
         _sharded_section(devices)
 
@@ -187,6 +190,56 @@ def _persistence_section() -> None:
             print(f"kernels,spgemm_persist_{name},{kb:.0f},{cold_ms:.1f},"
                   f"{warm_ms:.1f},{cold_ms / warm_ms:.2f}x,"
                   f"{plan.report.schedule_builds}")
+
+
+def _pipeline_section(depths=(1, 2, 4), steps: int = 24) -> None:
+    """Streaming throughput: N serving steps (fresh values generated per
+    step, one execute each) run synchronously vs through
+    ``SpGEMMPipeline`` at several depths. The pipelined side overlaps
+    value generation + staging (H2D + rebind) of step s+1 with step s's
+    kernel and defers every D2H to collect — the paper's double-buffered
+    operand fetch (depth 2) measured end to end. Results are
+    bitwise-equal by construction (tests/test_pipeline.py)."""
+    print("kernels,pipeline_case,depth,steps,sync_steps_s,pipe_steps_s,"
+          "speedup")
+    for name, scale, tile, group in (
+        ("poisson3Da", 0.02, 32, 4),
+        ("2cubes_sphere", 0.003, 32, 4),
+    ):
+        a = suite_matrix(name, scale=scale).to_coo().sum_duplicates()
+        b = COO(a.col, a.row, a.val, (a.shape[1], a.shape[0]))  # A^T
+        plan = spgemm_plan(a, b, tile=tile, group=group, backend="jnp",
+                           cache=PlanCache())
+        stream = SpGEMMValueStream(plan.a_pattern, plan.b_pattern, seed=3)
+
+        def sync():
+            return [plan.execute(*stream.values_at(s)) for s in range(steps)]
+
+        def piped(depth):
+            with plan.pipeline(depth=depth) as pipe:
+                return list(pipe.stream(
+                    stream.values_at(s) for s in range(steps)))
+
+        # Interleaved min-of-N (same rationale as the batched section).
+        sync()
+        for d in depths:
+            piped(d)  # warm the stage jits
+        best = {"sync": float("inf")}
+        best.update({d: float("inf") for d in depths})
+        for _ in range(7):
+            t0 = time.perf_counter()
+            sync()
+            best["sync"] = min(best["sync"], time.perf_counter() - t0)
+            for d in depths:
+                t0 = time.perf_counter()
+                piped(d)
+                best[d] = min(best[d], time.perf_counter() - t0)
+        sync_sps = steps / best["sync"]
+        for d in depths:
+            pipe_sps = steps / best[d]
+            print(f"kernels,spgemm_pipeline_{name},{d},{steps},"
+                  f"{sync_sps:.1f},{pipe_sps:.1f},"
+                  f"{pipe_sps / sync_sps:.2f}x")
 
 
 def _sharded_section(devices: int) -> None:
@@ -264,13 +317,20 @@ def main(argv=None):
     p.add_argument("--devices", type=int, default=4,
                    help="forced host devices for the sharded section "
                         "(0/1 skips it)")
+    p.add_argument("--pipeline-depth", type=str, default="1,2,4",
+                   help="comma-separated SpGEMMPipeline depths for the "
+                        "streaming-throughput section (empty/0 skips it)")
     p.add_argument("--sharded-worker", action="store_true",
                    help=argparse.SUPPRESS)  # internal: child process body
     args = p.parse_args(argv)
+    depths = tuple(
+        int(d) for d in args.pipeline_depth.split(",") if d.strip()
+    )
+    depths = tuple(d for d in depths if d > 0)
     if args.sharded_worker:
         _sharded_worker(args.devices)
     else:
-        run(devices=args.devices)
+        run(devices=args.devices, pipeline_depths=depths)
 
 
 if __name__ == "__main__":

@@ -25,7 +25,11 @@ SECTIONS = [
     ("Sec 4.2.4 — architectural parameters", bench_arch_params.main),
     # --devices 4: the sharded-plan section runs in a forced-host-device
     # subprocess (per-shard imbalance + values/s scaling vs 1 device).
-    ("Kernel schedule metrics", lambda: bench_kernels.main(["--devices", "4"])),
+    # --pipeline-depth: the async-serving streaming section (pipelined
+    # steps/s vs synchronous at depths 1/2/4).
+    ("Kernel schedule metrics",
+     lambda: bench_kernels.main(
+         ["--devices", "4", "--pipeline-depth", "1,2,4"])),
     ("Roofline (from dry-run artifacts)", roofline.main),
 ]
 

@@ -228,6 +228,31 @@ class SpGEMMValueStream:
         :meth:`SyntheticLM.iter`)."""
         return _prefetch_iter(self.batch_at, start_step, prefetch)
 
+    def value_iter(
+        self,
+        start_step: int = 0,
+        steps: Optional[int] = None,
+        prefetch: int = 2,
+    ) -> Iterator[tuple]:
+        """``(a_vals, b_vals)`` tuples, prefetched — the feed side of
+        ``SpGEMMPlan.execute_stream`` / ``SpGEMMPipeline.stream``.
+
+        Value generation runs in the prefetch thread, so it overlaps the
+        pipeline's device compute like every other stage. ``steps=N``
+        makes the iterator finite (the stream drains after N results);
+        ``steps=None`` streams forever. In batch mode each item is a
+        stacked ``[batch, nnz]`` pair (one pipelined ``execute_batch``
+        step)."""
+        it = self.iter(start_step, prefetch)
+        try:
+            n = 0
+            while steps is None or n < steps:
+                d = next(it)
+                yield d["a_vals"], d["b_vals"]
+                n += 1
+        finally:
+            it.close()
+
 
 def batch_specs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, jax.ShapeDtypeStruct]:
     """ShapeDtypeStruct stand-ins matching batch_at (for the dry-run)."""

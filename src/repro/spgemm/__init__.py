@@ -11,13 +11,37 @@ Typical use::
     cs = plan.execute_batch(a_batch, b_batch)  # [batch, nnz] values, one
                                                # vmapped device call
 
+    with plan.pipeline(depth=2) as pipe:    # async serving (submit/collect)
+        for c in pipe.stream(values.value_iter(steps=1000)):
+            consume(c)
+
     sharded = spgemm_plan(a, b, tile=64, group=4,
                           mesh=make_shard_mesh(4))  # ShardedSpGEMMPlan
     c2 = sharded.execute(a_vals2, b_vals2)  # same semantics, 4 devices
 
 The numeric phase is device-resident (``repro.spgemm.executor``): value
-rebind, the scheduled kernel, and output assembly run under one ``jax.jit``
-against the symbolic phase's precomputed CSR structure.
+rebind, the scheduled kernel, and output assembly run against the symbolic
+phase's precomputed CSR structure — fused under one ``jax.jit`` for
+synchronous executes, and *stage-split* into per-stage jits (H2D +
+rebind -> kernel -> assembly -> collect) behind one interface for the
+async path.
+
+**Async serving** (``repro.spgemm.pipeline``): ``plan.pipeline(depth)``
+returns an :class:`~repro.spgemm.pipeline.SpGEMMPipeline` —
+``submit(a_vals, b_vals)`` dispatches a step and returns a ticket
+immediately; ``collect(ticket)`` (or ``ticket.result()``) is the only
+blocking call. With ``depth`` steps in flight, step s+1's value staging
+(H2D + rebind, its own device program) overlaps step s's kernel — the
+paper's double-buffered operand fetch at ``depth=2``, each in-flight step
+owning its own staged packed A/B buffers on device (per shard on sharded
+plans). ``plan.execute_async`` is the one-shot form,
+``plan.execute_stream(value_iter, depth=)`` the ordered streaming form
+(feed it :meth:`repro.data.pipeline.SpGEMMValueStream.value_iter`).
+Pipelined results are **bitwise-equal** to sequential ``execute`` calls on
+element, block, batched, and sharded plans. While tickets are in flight
+the plan refuses buffer teardown — ``release_values``/``release`` and
+explicit cache eviction raise, and LRU eviction skips the plan — so
+staged device buffers can never be torn down under a running step.
 
 **Sharded plans** (the mesh-aware path): passing ``mesh=`` partitions the
 symbolic panel schedule across the devices of one mesh axis —
@@ -36,7 +60,8 @@ symbolic panel schedule across the devices of one mesh axis —
 * *execution*: one ``jax.jit(shard_map(...))`` call per execute (the jnp
   scheduled kernel on every backend, as in the batched path), with each
   shard running its own padded triple schedule against its own
-  :class:`~repro.core.schedule.AssemblyMap` slice.
+  :class:`~repro.core.schedule.AssemblyMap` slice; the async path splits
+  the same computation into per-stage ``shard_map`` programs.
 
 Plans are cached in a **two-tier** cache keyed on ``(pattern hash, tile,
 group, backend, mesh key)`` — the mesh key pins the shard axis, shard
@@ -44,7 +69,12 @@ count, and device ids, and is ``None`` on the unchanged single-device
 path:
 
 * the **memory tier** is a process-wide LRU of live plan objects (count +
-  byte budgets, ``PlanCache.stats()`` observability);
+  byte budgets, ``PlanCache.stats()`` observability). Serving callers can
+  attach a ``pattern_token`` (``spgemm_plan(..., pattern_token="layer3")``)
+  — a caller-chosen fast key that resolves warm lookups *without*
+  ``to_coo`` canonicalization or the pattern digest (most of the warm
+  path's host cost); the token is validated against the digest whenever
+  both are present and echoed in ``report.pattern_token``;
 * the **disk tier** (opt-in: ``PlanCache(disk_dir=...)``, or point
   ``REPRO_SPGEMM_PLAN_DIR`` at a directory for the process-default cache)
   persists the value-independent symbolic artifacts — triple schedule,
@@ -66,6 +96,11 @@ from repro.spgemm.cache import (
 )
 from repro.spgemm.persist import PLAN_DIR_ENV, PlanStore
 from repro.spgemm.executor import ShardedSpGEMMExecutor, SpGEMMExecutor
+from repro.spgemm.pipeline import (
+    PipelineFullError,
+    SpGEMMPipeline,
+    SpGEMMTicket,
+)
 from repro.spgemm.plan import (
     PlanReport,
     ShardedSpGEMMPlan,
@@ -78,13 +113,16 @@ from repro.spgemm.plan import (
 __all__ = [
     "CacheStats",
     "PLAN_DIR_ENV",
+    "PipelineFullError",
     "PlanCache",
     "PlanReport",
     "PlanStore",
     "ShardedSpGEMMExecutor",
     "ShardedSpGEMMPlan",
     "SpGEMMExecutor",
+    "SpGEMMPipeline",
     "SpGEMMPlan",
+    "SpGEMMTicket",
     "default_cache",
     "pattern_digest",
     "resolve_backend",

@@ -25,6 +25,7 @@ import dataclasses
 import hashlib
 import os
 import threading
+import weakref
 from collections import OrderedDict
 from typing import Callable, Optional, Tuple
 
@@ -64,6 +65,8 @@ class CacheStats:
 
     hits: int = 0  # memory-tier hits
     misses: int = 0  # memory-tier misses (may still hit disk)
+    token_hits: int = 0  # hits served through a pattern-token alias
+    # (no to_coo / digest paid; also counted in ``hits``)
     evictions: int = 0
     resident_plans: int = 0  # plans currently held
     resident_bytes: int = 0  # insert-time host_nbytes() of held plans
@@ -90,6 +93,7 @@ class CacheStats:
         return {
             "hits": self.hits,
             "misses": self.misses,
+            "token_hits": self.token_hits,
             "evictions": self.evictions,
             "resident_plans": self.resident_plans,
             "resident_bytes": self.resident_bytes,
@@ -134,6 +138,12 @@ class PlanCache:
     misses try a verified :class:`~repro.spgemm.persist.PlanStore` load
     before building, fresh builds are written back, and ``disk_max_bytes``
     bounds the directory (oldest-used files evicted after each save).
+
+    Serving extras: ``token_get``/``token_bind`` maintain caller-supplied
+    pattern-token aliases (the ``spgemm_plan(..., pattern_token=)`` fast
+    path), and ``evict(key)`` drops one plan explicitly. Teardown is
+    pipeline-safe — both explicit and LRU eviction refuse (raise / skip)
+    plans with in-flight pipeline steps.
     """
 
     def __init__(
@@ -158,6 +168,10 @@ class PlanCache:
         self._plans: OrderedDict = OrderedDict()
         self._sizes: dict = {}
         self._bytes = 0
+        # Pattern-token aliases: caller-supplied fast keys -> full plan
+        # keys. An alias outlives its plan (a rebuilt plan under the same
+        # full key revives it); lookups simply miss while the plan is out.
+        self._tokens: dict = {}
 
     @property
     def total_bytes(self) -> int:
@@ -170,11 +184,28 @@ class PlanCache:
         size = getattr(plan, "host_nbytes", None)
         return int(size()) if callable(size) else 0
 
-    def _pop_lru(self) -> None:
-        key, _ = self._plans.popitem(last=False)
+    def _drop(self, key) -> None:
+        """Remove one entry (lock held)."""
+        del self._plans[key]
         self._bytes -= self._sizes.pop(key, 0)
         self.stats.evictions += 1
         self._sync_resident()
+
+    def _pop_lru(self) -> bool:
+        """Evict the least-recently-used *evictable* plan (lock held).
+
+        Plans with in-flight pipeline steps are skipped — their staged
+        device buffers are still being read, so teardown must wait — and
+        the most recently inserted plan is never evicted. Returns False
+        when nothing is evictable (the caller stops; budgets are
+        temporarily exceeded rather than corrupted)."""
+        keys = list(self._plans)
+        for key in keys[:-1]:  # never the just-inserted (newest) plan
+            if getattr(self._plans[key], "in_flight", 0):
+                continue
+            self._drop(key)
+            return True
+        return False
 
     def _sync_resident(self) -> None:
         self.stats.resident_plans = len(self._plans)
@@ -238,6 +269,13 @@ class PlanCache:
                     except Exception:
                         pass  # persistence is an optimization, never fatal
         size = self._plan_size(plan)
+        # Back-reference for self-eviction: plan.release() uses this to
+        # drop its own (now dead) entry so the key cannot keep serving a
+        # released plan. Weak so the cache's lifetime is unaffected.
+        try:
+            plan._cache_ref = (weakref.ref(self), key)
+        except AttributeError:  # pragma: no cover - exotic plan objects
+            pass
         with self._lock:
             if key in self._plans:  # lost a build race: replace, re-charge
                 self._bytes -= self._sizes.pop(key, 0)
@@ -246,12 +284,76 @@ class PlanCache:
             self._sizes[key] = size
             self._bytes += size
             while len(self._plans) > self.capacity:
-                self._pop_lru()
+                if not self._pop_lru():
+                    break
             if self.max_bytes is not None:
                 while self._bytes > self.max_bytes and len(self._plans) > 1:
-                    self._pop_lru()
+                    if not self._pop_lru():
+                        break
             self._sync_resident()
         return plan, False
+
+    # -- pattern-token aliases (the serving warm path's fast key) ----------
+
+    def token_get(self, token_key: Tuple):
+        """Resolve a pattern-token alias to its live plan, or ``None``.
+
+        A hit skips everything the digest path pays (``to_coo``,
+        canonicalization, the pattern digest) — counted in
+        ``stats.token_hits`` as well as ``stats.hits``. A miss (unknown
+        token, or its plan was evicted) returns ``None`` and the caller
+        falls back to the full digest path, which re-binds the alias."""
+        with self._lock:
+            key = self._tokens.get(token_key)
+            if key is None or key not in self._plans:
+                return None
+            self.stats.hits += 1
+            self.stats.token_hits += 1
+            self._plans.move_to_end(key)
+            return self._plans[key]
+
+    def token_bind(self, token_key: Tuple, key: Tuple) -> None:
+        """Bind a pattern token to a full plan key.
+
+        A token is a caller's claim that two inputs share a sparsity
+        pattern; binding validates it against the digest whenever both
+        are present — re-binding a token to a *different* full key (a
+        different pattern digest, tile, group, backend, or mesh) raises
+        rather than silently serving the wrong plan."""
+        with self._lock:
+            old = self._tokens.get(token_key)
+            if old is not None and old != key:
+                raise ValueError(
+                    f"pattern token {token_key[1]!r} is already bound to a "
+                    f"different plan key (pattern digest/config mismatch); "
+                    f"tokens must uniquely name one sparsity pattern"
+                )
+            self._tokens[token_key] = key
+
+    def evict(self, key: Tuple, only=None) -> bool:
+        """Explicitly drop one plan from the memory tier.
+
+        Returns False if the key is not resident. Raises RuntimeError if
+        the plan has in-flight pipeline steps — its staged device buffers
+        are still being read; collect or close the pipeline first.
+
+        ``only`` pins identity: the entry is dropped only if the resident
+        plan *is* that object (``SpGEMMPlan.release`` self-evicts with
+        this, so releasing a stale plan whose key was since evicted and
+        rebuilt can neither drop nor complain about the new live plan)."""
+        with self._lock:
+            plan = self._plans.get(key)
+            if plan is None or (only is not None and plan is not only):
+                return False
+            n = getattr(plan, "in_flight", 0)
+            if n:
+                raise RuntimeError(
+                    f"cannot evict plan {key[0]!r}: {n} in-flight pipeline "
+                    f"step(s); collect the tickets or close the pipeline "
+                    f"first"
+                )
+            self._drop(key)
+            return True
 
     def __len__(self) -> int:
         with self._lock:
@@ -267,6 +369,7 @@ class PlanCache:
         with self._lock:
             self._plans.clear()
             self._sizes.clear()
+            self._tokens.clear()
             self._bytes = 0
             self.stats = CacheStats(store=self.store)
 

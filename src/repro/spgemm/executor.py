@@ -33,6 +33,28 @@ The same shape-static property is what makes the phase meshable:
 those constants along a leading shard axis, lays them out over one mesh
 axis, and runs all three stages under a single ``shard_map`` — A
 row-sharded, B replicated, C row-sharded and concatenated on host.
+
+**Stage-split pipeline surface.** Next to the fused cores, each stage is
+also exposed as its own module-level jit (``bind_core`` /
+``kernel_core`` / ``assemble_core`` plus batched variants) and both
+executors carry a four-step pipeline protocol over them::
+
+    staged = ex.pipe_stage(a, b, mode=...)   # H2D + value rebind dispatch
+    panels = ex.pipe_kernel(staged, mode)    # scheduled kernel dispatch
+    packed = ex.pipe_assemble(panels, mode)  # output-assembly gather
+    out    = ex.pipe_collect(packed, mode)   # the ONLY blocking call (D2H)
+
+Every step but ``pipe_collect`` merely *dispatches* device work (JAX
+async dispatch returns immediately), so a driver that stages step
+``s + 1`` before collecting step ``s`` overlaps ``s + 1``'s H2D copy and
+rebind with ``s``'s kernel — the paper's double-buffered operand fetch,
+expressed functionally: each in-flight step owns its own staged packed
+A/B block arrays on device (per shard on the sharded executor), so a
+pipeline of depth *d* is a *d*-deep operand buffer ring.
+:class:`repro.spgemm.pipeline.SpGEMMPipeline` is that driver. The split
+stages run exactly the ops of the fused cores (shared helper functions,
+same schedules), so pipelined results are bitwise-equal to the
+synchronous path on both kernel backends.
 """
 from __future__ import annotations
 
@@ -61,6 +83,12 @@ __all__ = [
     "CHUNK_BYTES_ENV",
     "ShardedSpGEMMExecutor",
     "SpGEMMExecutor",
+    "assemble_batch_core",
+    "assemble_core",
+    "bind_batch_core",
+    "bind_core",
+    "kernel_batch_core",
+    "kernel_core",
     "numeric_core",
     "numeric_core_batch",
     "resolve_chunk_bytes",
@@ -179,6 +207,21 @@ def _bind_batch(vals, inv, shape):
     return pad[:, inv].reshape((bsz * shape[0],) + tuple(shape[1:]))
 
 
+def _fold_schedule(sched, bsz, a_slots, b_slots, n_panels):
+    """Fold a value batch into the triple schedule: slot/panel indices of
+    all batch elements offset per element, so the batch executes as one
+    ``batch * T``-triple schedule over ``batch * n_panels`` panels while
+    preserving each element's accumulation order exactly."""
+    a_slot, b_slot, panel, sub_row = sched
+    off = jnp.arange(bsz, dtype=jnp.int32)[:, None]
+    return (
+        (off * a_slots + a_slot[None, :]).reshape(-1),
+        (off * b_slots + b_slot[None, :]).reshape(-1),
+        (off * n_panels + panel[None, :]).reshape(-1),
+        jnp.tile(sub_row, bsz),
+    )
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("a_shape", "b_shape", "rebind", "n_panels", "group"),
@@ -190,14 +233,11 @@ def numeric_core_batch(
     """Batched numeric phase over a leading value axis.
 
     Semantically ``jax.vmap`` of the functional core, lowered by *folding
-    the batch into the triple schedule*: the packed operands of all batch
-    elements are stacked along the slot axis and the slot/panel indices are
-    offset per element, so the batch executes as one ``batch * T``-triple
-    schedule over ``batch * n_panels`` panels. This keeps every op shape
-    identical to the single-set jnp path (one long sorted scatter instead
-    of a batched scatter, which XLA lowers poorly on CPU) and preserves
-    each element's accumulation order exactly — batch results are bitwise
-    equal to single jnp executes.
+    the batch into the triple schedule* (:func:`_fold_schedule`). This
+    keeps every op shape identical to the single-set jnp path (one long
+    sorted scatter instead of a batched scatter, which XLA lowers poorly
+    on CPU) and preserves each element's accumulation order exactly —
+    batch results are bitwise equal to single jnp executes.
 
     ``rebind=True`` takes [batch, nnz] value vectors (element plans);
     ``rebind=False`` takes batched packed block arrays (block plans).
@@ -209,16 +249,76 @@ def numeric_core_batch(
     else:
         a_blocks = a_vals.reshape((bsz * a_shape[0],) + tuple(a_shape[1:]))
         b_blocks = b_vals.reshape((bsz * b_shape[0],) + tuple(b_shape[1:]))
-    a_slot, b_slot, panel, sub_row = sched
-    off = jnp.arange(bsz, dtype=jnp.int32)[:, None]
-    a_slot_b = (off * a_shape[0] + a_slot[None, :]).reshape(-1)
-    b_slot_b = (off * b_shape[0] + b_slot[None, :]).reshape(-1)
-    panel_b = (off * n_panels + panel[None, :]).reshape(-1)
-    sub_row_b = jnp.tile(sub_row, bsz)
+    a_slot_b, b_slot_b, panel_b, sub_row_b = _fold_schedule(
+        sched, bsz, a_shape[0], b_shape[0], n_panels
+    )
     panels = ref.spgemm_scheduled_ref(
         a_blocks, b_blocks, a_slot_b, b_slot_b, panel_b, sub_row_b,
         bsz * n_panels, group,
     )
+    return panels.reshape(bsz, -1)[:, gather]
+
+
+# -- stage-split cores (the pipeline protocol's jits) ----------------------
+#
+# Module-level like the fused cores, so same-shaped plans share the stage
+# executables too. Each stage runs exactly the ops its slice of the fused
+# core runs (shared helpers, same schedule arrays), which is what keeps
+# pipelined results bitwise-equal to synchronous executes.
+
+
+@functools.partial(jax.jit, static_argnames=("shape",))
+def bind_core(vals, inv, *, shape):
+    """Stage 1 (element plans): [nnz] values -> packed blocks on device."""
+    return _bind(vals, inv, shape)
+
+
+@functools.partial(jax.jit, static_argnames=("shape",))
+def bind_batch_core(vals, inv, *, shape):
+    """Stage 1, batched: [batch, nnz] values -> stacked packed blocks."""
+    return _bind_batch(vals, inv, shape)
+
+
+@functools.partial(jax.jit, static_argnames=_STATICS)
+def kernel_core(
+    a_blocks, b_blocks, sched, *, n_panels, group, backend, interpret
+):
+    """Stage 2: packed blocks -> output panels (the scheduled kernel)."""
+    return _run_schedule(
+        a_blocks, b_blocks, sched,
+        n_panels=n_panels, group=group, backend=backend, interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("a_slots", "b_slots", "n_panels", "group"),
+)
+def kernel_batch_core(
+    a_blocks, b_blocks, sched, *, a_slots, b_slots, n_panels, group
+):
+    """Stage 2, batched: the folded-schedule jnp kernel over stacked
+    blocks (``[batch * slots, ...]``, as produced by stage 1)."""
+    bsz = a_blocks.shape[0] // a_slots
+    a_slot_b, b_slot_b, panel_b, sub_row_b = _fold_schedule(
+        sched, bsz, a_slots, b_slots, n_panels
+    )
+    return ref.spgemm_scheduled_ref(
+        a_blocks, b_blocks, a_slot_b, b_slot_b, panel_b, sub_row_b,
+        bsz * n_panels, group,
+    )
+
+
+@jax.jit
+def assemble_core(panels, gather):
+    """Stage 3: output panels -> packed C values (one static gather)."""
+    return panels.reshape(-1)[gather]
+
+
+@functools.partial(jax.jit, static_argnames=("n_panels",))
+def assemble_batch_core(panels, gather, *, n_panels):
+    """Stage 3, batched: per-element gather through the shared map."""
+    bsz = panels.shape[0] // n_panels
     return panels.reshape(bsz, -1)[:, gather]
 
 
@@ -354,6 +454,66 @@ class SpGEMMExecutor:
             a_shape=self.a_shape, b_shape=self.b_shape, rebind=rebind,
             n_panels=self.n_panels, group=self.group,
         )
+
+    # -- pipeline protocol (stage-split, non-blocking until collect) -------
+    #
+    # ``mode`` for pipe_stage: "values" ([nnz] vectors, element plans),
+    # "batch_values" ([batch, nnz]), "batch_blocks" ([batch, slots, ...]
+    # packed blocks). Single-shot block operands are staged by the plan's
+    # ``_stage_a``/``_stage_b`` hooks and enter at pipe_kernel directly.
+    # ``mode`` for kernel/assemble/collect: "single" or "batch". Single
+    # dispatches honor the plan's backend (like ``run``); batch dispatches
+    # take the jnp path (like ``run_batch``).
+
+    def pipe_stage(self, a, b, *, mode: str):
+        """H2D transfer + value-rebind dispatch; returns staged device
+        packed blocks without blocking."""
+        if mode == "values":
+            return (
+                bind_core(jax.device_put(a), self._a_inv,
+                          shape=self.a_shape),
+                bind_core(jax.device_put(b), self._b_inv,
+                          shape=self.b_shape),
+            )
+        if mode == "batch_values":
+            return (
+                bind_batch_core(jax.device_put(a), self._a_inv,
+                                shape=self.a_shape),
+                bind_batch_core(jax.device_put(b), self._b_inv,
+                                shape=self.b_shape),
+            )
+        if mode == "batch_blocks":
+            return (
+                jnp.asarray(a).reshape((-1,) + self.a_shape[1:]),
+                jnp.asarray(b).reshape((-1,) + self.b_shape[1:]),
+            )
+        raise ValueError(f"unknown stage mode {mode!r}")  # pragma: no cover
+
+    def pipe_kernel(self, staged, *, mode: str):
+        """Scheduled-kernel dispatch over staged blocks; non-blocking."""
+        a_blocks, b_blocks = staged
+        if mode == "single":
+            return kernel_core(
+                a_blocks, b_blocks, self._sched,
+                n_panels=self.n_panels, group=self.group,
+                backend=self.backend, interpret=self._interpret,
+            )
+        return kernel_batch_core(
+            a_blocks, b_blocks, self._sched_jnp,
+            a_slots=self.a_shape[0], b_slots=self.b_shape[0],
+            n_panels=self.n_panels, group=self.group,
+        )
+
+    def pipe_assemble(self, panels, *, mode: str):
+        """Output-assembly gather dispatch; non-blocking."""
+        if mode == "single":
+            return assemble_core(panels, self._gather)
+        return assemble_batch_core(panels, self._gather,
+                                   n_panels=self.n_panels)
+
+    def pipe_collect(self, packed, *, mode: str) -> np.ndarray:
+        """Materialize packed C values on host (the only blocking step)."""
+        return np.asarray(packed)
 
 
 class ShardedSpGEMMExecutor:
@@ -563,17 +723,17 @@ class ShardedSpGEMMExecutor:
 
         def kernel_batch(a_blocks, b_blocks, a_slot, b_slot, panel, sub_row,
                          gth, bsz):
-            off = jnp.arange(bsz, dtype=jnp.int32)[:, None]
+            a_slot_b, b_slot_b, panel_b, sub_row_b = _fold_schedule(
+                (a_slot, b_slot, panel, sub_row), bsz, a_max, b_shape[0],
+                p_max + 1,
+            )
             panels = ref.spgemm_scheduled_ref(
-                a_blocks, b_blocks,
-                (off * a_max + a_slot[None, :]).reshape(-1),
-                (off * b_shape[0] + b_slot[None, :]).reshape(-1),
-                (off * (p_max + 1) + panel[None, :]).reshape(-1),
-                jnp.tile(sub_row, bsz),
+                a_blocks, b_blocks, a_slot_b, b_slot_b, panel_b, sub_row_b,
                 bsz * (p_max + 1), group,
             )
             return panels.reshape(bsz, -1)[:, gth]
 
+        out = P(ax)
         if kind == "run":
             def body(a_bl, b_bl, a_slot, b_slot, panel, sub_row, gth):
                 return kernel(a_bl[0], b_bl, a_slot[0], b_slot[0], panel[0],
@@ -607,11 +767,62 @@ class ShardedSpGEMMExecutor:
                 return kernel_batch(a_bl, b_bl, a_slot[0], b_slot[0],
                                     panel[0], sub_row[0], gth[0], bsz)[None]
             specs = (P(ax), P(), P(ax), P(ax), P(ax), P(ax), P(ax))
+        # -- stage-split kinds (the pipeline protocol): same ops as the
+        # fused bodies above, one shard_map program per stage so staging
+        # step s+1 dispatches independently of step s's kernel.
+        elif kind == "bind":
+            def body(a_vals, b_vals, a_inv, b_inv):
+                a_bl = _bind(a_vals[0], a_inv[0], (a_max, bm, bk))
+                b_bl = _bind(b_vals, b_inv, b_shape)
+                return a_bl[None], b_bl
+            specs = (P(ax), P(), P(ax), P())
+            out = (P(ax), P())
+        elif kind == "bind_batch":
+            def body(a_vals, b_vals, a_inv, b_inv):
+                bsz = a_vals.shape[1]
+                a_bl = _bind_batch(a_vals[0], a_inv[0], (a_max, bm, bk))
+                b_bl = _bind_batch(b_vals, b_inv, b_shape)
+                return (
+                    a_bl.reshape((bsz, a_max, bm, bk))[None],
+                    b_bl.reshape((bsz,) + tuple(b_shape)),
+                )
+            specs = (P(ax), P(), P(ax), P())
+            out = (P(ax), P())
+        elif kind == "kernel":
+            def body(a_bl, b_bl, a_slot, b_slot, panel, sub_row):
+                return ref.spgemm_scheduled_ref(
+                    a_bl[0], b_bl, a_slot[0], b_slot[0], panel[0],
+                    sub_row[0], p_max + 1, group,
+                )[None]
+            specs = (P(ax), P(), P(ax), P(ax), P(ax), P(ax))
+        elif kind == "kernel_batch":
+            def body(a_bl, b_bl, a_slot, b_slot, panel, sub_row):
+                bsz = a_bl.shape[1]
+                a_slot_b, b_slot_b, panel_b, sub_row_b = _fold_schedule(
+                    (a_slot[0], b_slot[0], panel[0], sub_row[0]), bsz,
+                    a_max, b_shape[0], p_max + 1,
+                )
+                return ref.spgemm_scheduled_ref(
+                    a_bl[0].reshape((bsz * a_max, bm, bk)),
+                    b_bl.reshape((bsz * b_shape[0],) + tuple(b_shape[1:])),
+                    a_slot_b, b_slot_b, panel_b, sub_row_b,
+                    bsz * (p_max + 1), group,
+                )[None]
+            specs = (P(ax), P(), P(ax), P(ax), P(ax), P(ax))
+        elif kind == "assemble":
+            def body(panels, gth):
+                return panels[0].reshape(-1)[gth[0]][None]
+            specs = (P(ax), P(ax))
+        elif kind == "assemble_batch":
+            def body(panels, gth):
+                bsz = panels.shape[1] // (p_max + 1)
+                return panels[0].reshape(bsz, -1)[:, gth[0]][None]
+            specs = (P(ax), P(ax))
         else:  # pragma: no cover - internal
             raise ValueError(kind)
 
         fn = jax.jit(shard_map(
-            body, mesh=self.mesh, in_specs=specs, out_specs=P(ax),
+            body, mesh=self.mesh, in_specs=specs, out_specs=out,
         ))
         self._fns[kind] = fn
         return fn
@@ -660,3 +871,44 @@ class ShardedSpGEMMExecutor:
                 a_sh, b_d, *self._sched, self._gather
             ))
         return self._concat(out)
+
+    # -- pipeline protocol (same surface as SpGEMMExecutor) ----------------
+
+    def pipe_stage(self, a, b, *, mode: str):
+        """Mesh layout + H2D + per-shard rebind dispatch; non-blocking.
+
+        A values are host-sliced per shard and placed on the shard axis, B
+        replicated; the rebind runs as its own ``shard_map`` program so it
+        dispatches independently of the previous step's kernel."""
+        if mode == "values":
+            a_sh = jax.device_put(
+                self._slice_a_vals(np.asarray(a)), self._sep)
+            b_d = jax.device_put(np.asarray(b), self._rep)
+            return self._fn("bind")(a_sh, b_d, self._a_inv, self._b_inv)
+        if mode == "batch_values":
+            a_sh = jax.device_put(
+                self._slice_a_vals(np.asarray(a)), self._sep)
+            b_d = jax.device_put(np.asarray(b), self._rep)
+            return self._fn("bind_batch")(a_sh, b_d, self._a_inv,
+                                          self._b_inv)
+        if mode == "batch_blocks":
+            return (
+                jax.device_put(self._stack_a(np.asarray(a)), self._sep),
+                jax.device_put(np.asarray(b), self._rep),
+            )
+        raise ValueError(f"unknown stage mode {mode!r}")  # pragma: no cover
+
+    def pipe_kernel(self, staged, *, mode: str):
+        """Per-shard scheduled-kernel dispatch (one shard_map program)."""
+        a_bl, b_bl = staged
+        kind = "kernel" if mode == "single" else "kernel_batch"
+        return self._fn(kind)(a_bl, b_bl, *self._sched)
+
+    def pipe_assemble(self, panels, *, mode: str):
+        """Per-shard output-assembly gather dispatch."""
+        kind = "assemble" if mode == "single" else "assemble_batch"
+        return self._fn(kind)(panels, self._gather)
+
+    def pipe_collect(self, packed, *, mode: str) -> np.ndarray:
+        """Blocking D2H + per-shard pad trim + host concatenation."""
+        return self._concat(np.asarray(packed))

@@ -61,6 +61,7 @@ from repro.sparse.convert import bcsr_from_coo, bcsv_from_coo, to_coo
 from repro.sparse.formats import BCSR, BCSV, COO, CSR
 from repro.spgemm.cache import PlanCache, default_cache, pattern_digest
 from repro.spgemm.executor import ShardedSpGEMMExecutor, SpGEMMExecutor
+from repro.spgemm.pipeline import SpGEMMPipeline, SpGEMMTicket, _Prepared
 
 __all__ = [
     "PlanReport",
@@ -89,10 +90,10 @@ def resolve_backend(backend: str = "auto") -> str:
 
 
 _REPORT_FIELDS = (
-    "pattern_key", "tile", "group", "backend", "shape", "nnz_a", "nnz_b",
-    "nnzb_a", "nnzb_b", "nnzb_c", "num_triples", "n_panels", "b_fetches",
-    "block_omar", "schedule_builds", "cache_hits", "executes", "loads",
-    "load_hits", "cache_stats",
+    "pattern_key", "pattern_token", "tile", "group", "backend", "shape",
+    "nnz_a", "nnz_b", "nnzb_a", "nnzb_b", "nnzb_c", "num_triples",
+    "n_panels", "b_fetches", "block_omar", "schedule_builds", "cache_hits",
+    "executes", "loads", "load_hits", "cache_stats",
 )
 
 
@@ -133,6 +134,9 @@ class PlanReport:
         # the disk tier (the warm-restart acceptance counter)
         cache_stats: Optional[dict] = None,  # serving PlanCache.stats()
         # snapshot, refreshed on every spgemm_plan lookup for this plan
+        pattern_token: Optional[str] = None,  # caller-supplied fast cache
+        # key (spgemm_plan(..., pattern_token=)); echoed so serving
+        # callers can audit which token a plan answers to
     ):
         self._pattern_key = pattern_key
         self._nnz_a = nnz_a
@@ -154,6 +158,7 @@ class PlanReport:
         self.loads = loads
         self.load_hits = load_hits
         self.cache_stats = cache_stats
+        self.pattern_token = pattern_token
 
     @property
     def pattern_key(self) -> str:
@@ -269,6 +274,15 @@ class SpGEMMPlan:
         # caller), so concurrent executes must each see a consistent
         # (values, device array) pair.
         self._lock = threading.Lock()
+        # Pipeline accounting: steps submitted but not yet collected (or
+        # discarded). While nonzero, buffer teardown (release_values /
+        # release / cache eviction) refuses — an in-flight step's device
+        # work still reads staged constants.
+        self._inflight = 0
+        self._released = False
+        # (weakref-to-cache, key) set by PlanCache on insert; release()
+        # evicts through it so a dead plan never stays resident.
+        self._cache_ref = None
 
     def _make_executor(self):
         """Build the numeric executor (called once, at plan build)."""
@@ -556,6 +570,7 @@ class SpGEMMPlan:
         pattern. Zero schedule-construction work; the whole phase (kernel +
         output assembly) runs inside the executor's jit."""
         with self._lock:
+            self._check_released()
             # report.nnz_* is read only on the scatter (element-plan) path:
             # block plans keep their lazy count_nonzero report fields
             # unresolved through executes.
@@ -645,6 +660,7 @@ class SpGEMMPlan:
             )
         batch = int(a_vals.shape[0])
         with self._lock:
+            self._check_released()
             self.report.executes += batch
         if batch == 0:
             return []
@@ -672,12 +688,190 @@ class SpGEMMPlan:
             out.extend(self._wrap_packed(packed[i]) for i in range(hi - lo))
         return out
 
+    # -- async serving (the stage-split pipeline surface) ------------------
+
+    def pipeline(self, depth: int = 2) -> SpGEMMPipeline:
+        """A bounded-depth submit/collect pipeline over this plan.
+
+        ``depth=2`` is the paper's double buffer: one step staging (H2D +
+        rebind) while one computes. See
+        :class:`repro.spgemm.pipeline.SpGEMMPipeline`."""
+        return SpGEMMPipeline(self, depth=depth)
+
+    def execute_async(self, a_vals=None, b_vals=None) -> SpGEMMTicket:
+        """Dispatch one numeric phase without blocking; redeem the
+        returned ticket with ``.result()``.
+
+        Same operand shapes as ``execute`` (a leading batch axis makes
+        the ticket redeem to ``execute_batch``'s list-of-CSR output).
+        Each call is its own depth-1 pipeline — in-flight count is
+        caller-managed; use :meth:`pipeline` for bounded-depth serving.
+        """
+        return SpGEMMPipeline(self, depth=1).submit(a_vals, b_vals)
+
+    def execute_stream(self, value_iter, *, depth: int = 2):
+        """Stream value sets through a ``depth``-deep pipeline, yielding
+        one CSR per item in order.
+
+        ``value_iter`` yields ``(a_vals, b_vals)`` tuples or ``{"a_vals",
+        "b_vals"}`` dicts — e.g.
+        :meth:`repro.data.pipeline.SpGEMMValueStream.value_iter`. Results
+        are bitwise-equal to calling ``execute`` per item; step ``s+1``'s
+        staging overlaps step ``s``'s kernel throughout."""
+        return SpGEMMPipeline(self, depth=depth).stream(value_iter)
+
+    @property
+    def in_flight(self) -> int:
+        """Pipeline steps submitted against this plan and not yet
+        collected (or discarded). Buffer teardown refuses while > 0."""
+        with self._lock:
+            return self._inflight
+
+    def _check_released(self) -> None:
+        """Call under ``self._lock``."""
+        if self._released:
+            raise RuntimeError(
+                "plan was released (release()); build or fetch a new plan"
+            )
+
+    def _check_no_inflight(self, what: str) -> None:
+        """Call under ``self._lock``."""
+        if self._inflight:
+            raise RuntimeError(
+                f"cannot {what}: {self._inflight} in-flight pipeline "
+                f"step(s) still read this plan's staged buffers; collect "
+                f"the tickets or close the pipeline first"
+            )
+
+    def _pipe_check(self, a_vals, b_vals) -> _Prepared:
+        """Validate one submission and prepare its operands (host work +
+        plan-state snapshot only; no device compute is dispatched).
+
+        Stateless w.r.t. the plan's staged values — explicit operands
+        never touch the buffers no-arg ``execute()`` reuses — except that
+        the no-arg form stages (and caches) the plan's own values exactly
+        like ``execute()`` does."""
+        if (a_vals is None) != (b_vals is None):
+            raise ValueError(
+                "submit takes both a_vals and b_vals, or neither "
+                "(to reuse the plan's staged values)"
+            )
+        if a_vals is None:
+            with self._lock:
+                self._check_released()
+                if self._a_blocks is None or self._b_blocks is None:
+                    raise ValueError(
+                        "plan values were released (release_values); pass "
+                        "a_vals/b_vals to submit"
+                    )
+                if self._executor is not None:
+                    if self._a_dev is None:
+                        self._a_dev = self._stage_a(self._a_blocks)
+                    if self._b_dev is None:
+                        self._b_dev = self._stage_b(self._b_blocks)
+                return _Prepared("blocks", self._a_dev, self._b_dev,
+                                 None, 1)
+        with self._lock:
+            self._check_released()
+        a_vals = np.asarray(a_vals)
+        b_vals = np.asarray(b_vals)
+        rebind = self._a_scatter is not None and self._b_scatter is not None
+        if rebind:
+            want_a = (self.report.nnz_a,)
+            want_b = (self.report.nnz_b,)
+        else:
+            want_a, want_b = self._a_shape, self._b_shape
+        single = a_vals.shape == want_a and b_vals.shape == want_b
+        batched = (
+            a_vals.ndim == len(want_a) + 1 and a_vals.shape[1:] == want_a
+            and b_vals.shape[:1] == a_vals.shape[:1]
+            and b_vals.shape[1:] == want_b
+        )
+        if not (single or batched):
+            raise ValueError(
+                f"submit: expected a_vals {want_a} / b_vals {want_b} "
+                f"(optionally with a shared leading batch axis), got "
+                f"{a_vals.shape} / {b_vals.shape}"
+            )
+        a_vals = a_vals.astype(self._a_dtype, copy=False)
+        b_vals = b_vals.astype(self._b_dtype, copy=False)
+        if single:
+            if rebind:
+                return _Prepared("values", a_vals, b_vals, None, 1)
+            # Packed-block operands: stage now (copy-on-stage, the
+            # executor's device layout) so the caller may reuse buffers.
+            return _Prepared(
+                "blocks", self._stage_a(a_vals), self._stage_b(b_vals),
+                None, 1,
+            )
+        mode = "batch_values" if rebind else "batch_blocks"
+        batch = int(a_vals.shape[0])
+        return _Prepared(mode, a_vals, b_vals, batch, batch)
+
+    def _pipe_begin(self, n_execs: int) -> None:
+        with self._lock:
+            self._check_released()
+            self.report.executes += n_execs
+            self._inflight += 1
+
+    def _pipe_end(self) -> None:
+        with self._lock:
+            self._inflight -= 1
+
+    def _pipe_dispatch(self, prep: _Prepared):
+        """Dispatch one prepared step's device work (stage -> kernel ->
+        assemble) without blocking; returns the packed device result (a
+        list of per-chunk results for batch submissions)."""
+        if self._executor is None or (prep.batch == 0):
+            return None
+        ex = self._executor
+        if prep.batch is None:
+            staged = (
+                (prep.a, prep.b) if prep.mode == "blocks"
+                else ex.pipe_stage(prep.a, prep.b, mode=prep.mode)
+            )
+            panels = ex.pipe_kernel(staged, mode="single")
+            return ex.pipe_assemble(panels, mode="single")
+        # Batch submissions chunk exactly like execute_batch, so the
+        # device accumulator working set stays cache-resident; each chunk
+        # is dispatched back-to-back (still zero host blocking).
+        chunk = min(prep.batch, ex.batch_chunk())
+        out = []
+        for lo in range(0, prep.batch, chunk):
+            hi = min(lo + chunk, prep.batch)
+            staged = ex.pipe_stage(
+                prep.a[lo:hi], prep.b[lo:hi], mode=prep.mode)
+            panels = ex.pipe_kernel(staged, mode="batch")
+            out.append(ex.pipe_assemble(panels, mode="batch"))
+        return out
+
+    def _pipe_collect(self, prep: _Prepared, packed):
+        """Materialize one dispatched step on host (the blocking D2H) and
+        wrap it in the plan's precomputed CSR structure."""
+        if prep.batch is None:
+            if self._executor is None:
+                return self._empty_csr()
+            return self._wrap_packed(
+                self._executor.pipe_collect(packed, mode="single"))
+        if self._executor is None:
+            return [self._empty_csr() for _ in range(prep.batch)]
+        out = []
+        for chunk_packed in (packed or ()):
+            arr = self._executor.pipe_collect(chunk_packed, mode="batch")
+            out.extend(self._wrap_packed(arr[i])
+                       for i in range(arr.shape[0]))
+        return out
+
+    # -- teardown ----------------------------------------------------------
+
     def release_device_values(self) -> None:
         """Drop only the staged device copies of the packed block values.
 
-        The next execute restages from the host arrays on demand.
+        The next execute restages from the host arrays on demand. Refuses
+        while pipeline steps are in flight (they read these buffers).
         """
         with self._lock:
+            self._check_no_inflight("release device values")
             self._a_dev = None
             self._b_dev = None
 
@@ -690,12 +884,40 @@ class SpGEMMPlan:
         assembly map) — not operand-sized value arrays. After release,
         ``execute`` requires explicit ``a_vals``/``b_vals``
         (``execute_batch`` is unaffected — it never reads staged values).
+        Refuses while pipeline steps are in flight.
         """
         with self._lock:
+            self._check_no_inflight("release values")
             self._a_dev = None
             self._b_dev = None
             self._a_blocks = None
             self._b_blocks = None
+
+    def release(self) -> None:
+        """Full teardown: values (host + device) AND the executor's
+        device-resident constants. The plan is dead afterwards — any
+        execute/submit raises — and it evicts itself from the cache that
+        holds it, so the next ``spgemm_plan`` for this pattern builds (or
+        disk-loads) a fresh plan instead of hitting the dead one. Refuses
+        while pipeline steps are in flight; serving operators drain or
+        ``close()`` pipelines first.
+        """
+        with self._lock:
+            self._check_no_inflight("release plan")
+            self._released = True
+            self._a_dev = None
+            self._b_dev = None
+            self._a_blocks = None
+            self._b_blocks = None
+            self._executor = None
+            ref = self._cache_ref
+        # Self-evict outside the plan lock (eviction re-checks in_flight,
+        # which takes it). in_flight is 0 and submits now refuse, so the
+        # guarded evict cannot race back to RuntimeError.
+        if ref is not None:
+            cache = ref[0]()
+            if cache is not None:
+                cache.evict(ref[1], only=self)
 
     def host_nbytes(self) -> int:
         """Approximate bytes of host arrays this plan retains — the sizing
@@ -869,6 +1091,34 @@ def _mesh_key(mesh: Optional[Mesh], mesh_axis: Optional[str]):
             tuple(int(d.id) for d in np.ravel(mesh.devices)))
 
 
+def _coo_is_canonical(coo: COO) -> bool:
+    """True when the COO is in canonical order: strictly increasing
+    row-major (row, col) keys — sorted, deduplicated. O(nnz) vectorized,
+    far cheaper than the sort ``sum_duplicates`` pays."""
+    key = coo.row.astype(np.int64) * int(coo.shape[1]) + coo.col
+    return bool(np.all(np.diff(key) > 0))
+
+
+def _canonical_coo(coo: COO) -> COO:
+    """The COO in canonical order, paying the sort only when needed."""
+    return coo if _coo_is_canonical(coo) else coo.sum_duplicates()
+
+
+def _value_dtype(x):
+    """The value dtype of any plan input, or ``None`` if unreadable."""
+    if x is None:
+        return None
+    v = getattr(x, "val", None)  # COO/CSR/CSC/CSV
+    if v is not None:
+        return np.asarray(v).dtype
+    blocks = getattr(x, "blocks", None)  # BCSV/BCSR
+    if blocks is not None:
+        return np.asarray(blocks).dtype
+    if isinstance(x, np.ndarray):
+        return x.dtype
+    return None
+
+
 def _staged_nnz(plan: "SpGEMMPlan", attr: str, field: str):
     """Lazy element-count resolver reading the plan's staged blocks —
     holds no reference to operand arrays beyond what the plan itself
@@ -939,6 +1189,7 @@ def spgemm_plan(
     cache: Optional[PlanCache] = None,
     mesh: Optional[Mesh] = None,
     mesh_axis: Optional[str] = None,
+    pattern_token: Optional[str] = None,
 ) -> SpGEMMPlan:
     """Build — or fetch from the plan cache — an :class:`SpGEMMPlan`.
 
@@ -953,12 +1204,125 @@ def spgemm_plan(
     over ``mesh_axis`` (default: the mesh's first axis); ``mesh=None`` is
     the unchanged single-device path. Pass ``cache=PlanCache(...)`` to
     isolate from the process-level cache.
+
+    ``pattern_token`` is the serving warm path's fast key: a caller's
+    name for the sparsity pattern (e.g. a model/layer id). On a cache hit
+    the token resolves the plan directly — no ``to_coo``
+    canonicalization, no pattern digest, which is most of the warm path's
+    host cost on large patterns. The token is the caller's *claim* of
+    pattern equality: it is validated against the digest whenever both
+    are present (the first build, and any later digest-path lookup —
+    binding one token to two different patterns/configs raises), and
+    echoed in ``report.pattern_token``. On a token hit, values are
+    rebound only when ``a``/``b`` are :class:`COO` inputs (canonical
+    row-major order is verified in O(nnz) and restored by a sort only
+    when an input needs it; an element-count mismatch raises); other
+    input types are returned with whatever values the plan has staged —
+    serving callers pass fresh values to ``execute``/``submit`` anyway.
+    A value-dtype mismatch never hits the token: it falls through to the
+    digest path, which raises the token conflict instead of silently
+    casting. ``a=None, b=None`` with a token is a pure lookup (raises
+    ``KeyError`` on a miss).
     """
     global _SCHEDULE_BUILDS
     backend = resolve_backend(backend)
     if cache is None:
         cache = default_cache()
     shard_key = _mesh_key(mesh, mesh_axis)
+
+    token_key = None
+    if pattern_token is not None:
+        token_key = ("token", str(pattern_token), _normalize_tile(tile),
+                     int(group), backend, shard_key)
+        plan = cache.token_get(token_key)
+        # Value dtype is part of the full (digest) key but not the token
+        # key — a dtype mismatch must not be served (and silently cast) by
+        # the token hit. Fall through to the digest path instead, where
+        # token_bind raises the conflict explicitly.
+        if plan is not None:
+            dt_a, dt_b = _value_dtype(a), _value_dtype(b)
+            if ((dt_a is not None and dt_a != plan._a_dtype)
+                    or (dt_b is not None and dt_b != plan._b_dtype)):
+                plan = None
+        if plan is not None:
+            element = (plan._a_scatter is not None
+                       and plan._b_scatter is not None)
+            with plan._lock:
+                plan.report.cache_hits += 1
+                if a is None and b is None:
+                    pass  # pure lookup: staged values stay as they are
+                elif (element
+                        and isinstance(a, COO) and isinstance(b, COO)):
+                    # Scatter indices assume canonical row-major order;
+                    # verify it (O(nnz)) and pay the canonicalizing sort
+                    # only for inputs that need it. An element-count
+                    # mismatch means the token named a different pattern
+                    # — refuse rather than stage garbage.
+                    a_c, b_c = _canonical_coo(a), _canonical_coo(b)
+                    if (a_c.nnz != plan.report.nnz_a
+                            or b_c.nnz != plan.report.nnz_b):
+                        raise ValueError(
+                            f"pattern_token {pattern_token!r}: input nnz "
+                            f"({a_c.nnz}, {b_c.nnz}) does not match the "
+                            f"token's plan ({plan.report.nnz_a}, "
+                            f"{plan.report.nnz_b}); the token must name "
+                            f"this exact sparsity pattern"
+                        )
+                    plan._a_blocks = plan._rebind(
+                        a_c.val, plan._a_blocks, plan._a_scatter,
+                        plan.report.nnz_a, "a_vals", plan._a_shape,
+                        plan._a_dtype,
+                    )
+                    plan._a_dev = None
+                    plan._b_blocks = plan._rebind(
+                        b_c.val, plan._b_blocks, plan._b_scatter,
+                        plan.report.nnz_b, "b_vals", plan._b_shape,
+                        plan._b_dtype,
+                    )
+                    plan._b_dev = None
+                elif (not element
+                        and isinstance(a, BCSV) and isinstance(b, BCSR)):
+                    # Block plans: mirror the digest hit path's rebind of
+                    # this call's packed blocks (geometry-checked — a
+                    # shape mismatch means the token lied).
+                    if (tuple(a.blocks.shape) != plan._a_shape
+                            or tuple(b.blocks.shape) != plan._b_shape):
+                        raise ValueError(
+                            f"pattern_token {pattern_token!r}: packed "
+                            f"block shapes {a.blocks.shape}/"
+                            f"{b.blocks.shape} do not match the token's "
+                            f"plan {plan._a_shape}/{plan._b_shape}"
+                        )
+                    plan._a_blocks = a.blocks
+                    plan._b_blocks = b.blocks
+                    plan._a_dev = None
+                    plan._b_dev = None
+                else:
+                    # Any other input type would silently keep the
+                    # previous caller's staged values — refuse instead
+                    # (the digest path, which converts anything, is one
+                    # dropped kwarg away).
+                    raise ValueError(
+                        f"pattern_token {pattern_token!r}: the token fast "
+                        f"path rebinds values only for COO (element "
+                        f"plans) or BCSV/BCSR (block plans) inputs, or "
+                        f"a=b=None for a pure lookup; got "
+                        f"{type(a).__name__}/{type(b).__name__} — drop "
+                        f"pattern_token to take the full conversion path"
+                    )
+            plan.report.cache_stats = cache.stats()
+            return plan
+        if a is None or b is None:
+            raise KeyError(
+                f"pattern_token {pattern_token!r} is not resident in the "
+                f"plan cache and no operands were given to build from"
+            )
+
+    def bind_token(plan: SpGEMMPlan, key: Tuple) -> None:
+        if token_key is None:
+            return
+        cache.token_bind(token_key, key)
+        plan.report.pattern_token = str(pattern_token)
 
     if isinstance(a, BCSV) and isinstance(b, BCSR):
         if a.block_shape[1] != b.block_shape[0]:
@@ -978,6 +1342,7 @@ def spgemm_plan(
                 a_blocks=a.blocks, b_blocks=b.blocks,
                 mesh=mesh, mesh_axis=mesh_axis),
         )
+        bind_token(plan, key)
         plan.report.cache_stats = cache.stats()
         if hit:
             with plan._lock:
@@ -1043,6 +1408,7 @@ def spgemm_plan(
         )
 
     plan, hit = cache.get_or_build(key, build, loader=load)
+    bind_token(plan, key)
     plan.report.cache_stats = cache.stats()
     if hit:
         with plan._lock:

@@ -283,3 +283,227 @@ class TestPlanReport:
         d = rep.as_dict()
         assert d["pattern_key"] == rep.pattern_key
         assert d["schedule_builds"] == 1
+
+
+class TestPatternToken:
+    """spgemm_plan(..., pattern_token=): the serving warm path's fast
+    cache key — resident lookups skip to_coo + the pattern digest."""
+
+    def test_token_hit_skips_digest_and_returns_same_plan(self, monkeypatch):
+        cache = PlanCache()
+        a = _int_coo(64, 48, 0.1, 11)
+        b = _int_coo(48, 64, 0.1, 12)
+        plan = spgemm_plan(a, b, tile=16, group=2, backend="jnp",
+                           cache=cache, pattern_token="layer0")
+        assert plan.report.pattern_token == "layer0"
+        assert plan.report.as_dict()["pattern_token"] == "layer0"
+        # A token hit must never touch the digest path.
+        from repro.spgemm import plan as plan_mod
+
+        def boom(*a, **k):
+            raise AssertionError("token hit paid the pattern digest")
+
+        monkeypatch.setattr(plan_mod, "pattern_digest", boom)
+        p2 = spgemm_plan(a, b, tile=16, group=2, backend="jnp",
+                         cache=cache, pattern_token="layer0")
+        assert p2 is plan
+        assert cache.stats.token_hits == 1
+        assert plan.report.cache_hits == 1
+
+    def test_token_hit_rebinds_canonical_coo_values(self):
+        cache = PlanCache()
+        a = _int_coo(64, 48, 0.1, 21)
+        b = _int_coo(48, 64, 0.1, 22)
+        plan = spgemm_plan(a, b, tile=16, group=2, backend="jnp",
+                           cache=cache, pattern_token="t")
+        a2 = COO(a.row, a.col, a.val * 3.0, a.shape)
+        b2 = COO(b.row, b.col, b.val * 0.5, b.shape)
+        p2 = spgemm_plan(a2, b2, tile=16, group=2, backend="jnp",
+                         cache=cache, pattern_token="t")
+        assert p2 is plan
+        want = spgemm_gustavson(to_csr(a2), to_csr(b2))
+        got = p2.execute()  # staged values must be this call's
+        assert np.allclose(got.todense(), want.todense())
+
+    def test_pure_lookup_without_operands(self):
+        cache = PlanCache()
+        a = _int_coo(32, 32, 0.15, 31)
+        b = _int_coo(32, 32, 0.15, 32)
+        with pytest.raises(KeyError, match="not resident"):
+            spgemm_plan(None, None, tile=16, group=2, backend="jnp",
+                        cache=cache, pattern_token="missing")
+        plan = spgemm_plan(a, b, tile=16, group=2, backend="jnp",
+                           cache=cache, pattern_token="tok")
+        p2 = spgemm_plan(None, None, tile=16, group=2, backend="jnp",
+                         cache=cache, pattern_token="tok")
+        assert p2 is plan
+
+    def test_token_digest_conflict_raises(self):
+        """Binding one token to two different patterns is the caller lie
+        the digest validation catches — whenever the digest path runs
+        (here: the aliased plan was evicted, so the token lookup misses
+        and the full path computes the conflicting digest)."""
+        cache = PlanCache(capacity=1)
+        a = _int_coo(32, 32, 0.15, 41)
+        b = _int_coo(32, 32, 0.15, 42)
+        spgemm_plan(a, b, tile=16, group=2, backend="jnp",
+                    cache=cache, pattern_token="tok")
+        a2 = _int_coo(32, 32, 0.2, 43)  # different pattern
+        b2 = _int_coo(32, 32, 0.2, 44)
+        spgemm_plan(a2, b2, tile=16, group=2, backend="jnp",
+                    cache=cache)  # evicts the aliased plan
+        with pytest.raises(ValueError, match="already bound"):
+            spgemm_plan(a2, b2, tile=16, group=2, backend="jnp",
+                        cache=cache, pattern_token="tok")
+
+    def test_token_scopes_by_config(self):
+        """The same token under a different tile/group/backend resolves
+        independently (the token names a pattern *per config*)."""
+        cache = PlanCache()
+        a = _int_coo(64, 48, 0.1, 51)
+        b = _int_coo(48, 64, 0.1, 52)
+        p16 = spgemm_plan(a, b, tile=16, group=2, backend="jnp",
+                          cache=cache, pattern_token="tok")
+        p8 = spgemm_plan(a, b, tile=8, group=2, backend="jnp",
+                         cache=cache, pattern_token="tok")
+        assert p8 is not p16
+        assert spgemm_plan(None, None, tile=16, group=2, backend="jnp",
+                           cache=cache, pattern_token="tok") is p16
+        assert spgemm_plan(None, None, tile=8, group=2, backend="jnp",
+                           cache=cache, pattern_token="tok") is p8
+
+    def test_evicted_plan_falls_back_to_full_path(self):
+        cache = PlanCache(capacity=1)
+        a = _int_coo(32, 32, 0.15, 61)
+        b = _int_coo(32, 32, 0.15, 62)
+        spgemm_plan(a, b, tile=16, group=2, backend="jnp",
+                    cache=cache, pattern_token="tok")
+        # Evict by inserting a different pattern.
+        a2 = _int_coo(32, 32, 0.2, 63)
+        b2 = _int_coo(32, 32, 0.2, 64)
+        spgemm_plan(a2, b2, tile=16, group=2, backend="jnp", cache=cache)
+        # Token lookup misses (plan evicted) and the full digest path
+        # rebuilds + re-binds the alias.
+        p = spgemm_plan(a, b, tile=16, group=2, backend="jnp",
+                        cache=cache, pattern_token="tok")
+        assert p.report.pattern_token == "tok"
+        assert spgemm_plan(None, None, tile=16, group=2, backend="jnp",
+                           cache=cache, pattern_token="tok") is p
+
+    def test_token_hit_canonicalizes_unsorted_coo(self):
+        """A token hit with a permuted (non-canonical) COO must produce
+        the same results as the digest path — the hit verifies canonical
+        order and sorts only when needed (review regression)."""
+        cache = PlanCache()
+        a = _int_coo(48, 40, 0.12, 71)
+        b = _int_coo(40, 48, 0.12, 72)
+        plan = spgemm_plan(a, b, tile=8, group=2, backend="jnp",
+                           cache=cache, pattern_token="tok")
+        rng = np.random.default_rng(0)
+        pa = rng.permutation(a.nnz)
+        pb = rng.permutation(b.nnz)
+        a_shuf = COO(a.row[pa], a.col[pa], (a.val * 2.0)[pa], a.shape)
+        b_shuf = COO(b.row[pb], b.col[pb], (b.val * 3.0)[pb], b.shape)
+        p2 = spgemm_plan(a_shuf, b_shuf, tile=8, group=2, backend="jnp",
+                         cache=cache, pattern_token="tok")
+        assert p2 is plan
+        got = p2.execute()
+        want = spgemm_gustavson(to_csr(a_shuf.sum_duplicates()),
+                                to_csr(b_shuf.sum_duplicates()))
+        assert np.array_equal(got.todense(), want.todense())
+
+    def test_token_hit_rejects_wrong_nnz(self):
+        cache = PlanCache()
+        a = _int_coo(48, 40, 0.12, 81)
+        b = _int_coo(40, 48, 0.12, 82)
+        spgemm_plan(a, b, tile=8, group=2, backend="jnp",
+                    cache=cache, pattern_token="tok")
+        a_less = COO(a.row[:-1], a.col[:-1], a.val[:-1], a.shape)
+        with pytest.raises(ValueError, match="does not match the token"):
+            spgemm_plan(a_less, b, tile=8, group=2, backend="jnp",
+                        cache=cache, pattern_token="tok")
+
+    def test_token_never_serves_across_value_dtypes(self):
+        """A float64 request must not be served (and silently downcast)
+        by a float32-built plan through the token fast path — it falls
+        to the digest path, which raises the token conflict."""
+        cache = PlanCache()
+        a = _int_coo(48, 40, 0.12, 91)
+        b = _int_coo(40, 48, 0.12, 92)
+        p32 = spgemm_plan(a, b, tile=8, group=2, backend="jnp",
+                          cache=cache, pattern_token="tok")
+        a64 = COO(a.row, a.col, a.val.astype(np.float64), a.shape)
+        b64 = COO(b.row, b.col, b.val.astype(np.float64), b.shape)
+        with pytest.raises(ValueError, match="already bound"):
+            spgemm_plan(a64, b64, tile=8, group=2, backend="jnp",
+                        cache=cache, pattern_token="tok")
+        # ... and without the token the float64 plan is simply distinct.
+        p64 = spgemm_plan(a64, b64, tile=8, group=2, backend="jnp",
+                          cache=cache)
+        assert p64 is not p32
+
+    def test_release_evicts_dead_plan_from_cache(self):
+        """release() must not leave the dead plan resident — the next
+        spgemm_plan for the pattern rebuilds instead of hitting a plan
+        that can only raise (review regression)."""
+        cache = PlanCache()
+        a = _int_coo(48, 40, 0.12, 95)
+        b = _int_coo(40, 48, 0.12, 96)
+        plan = spgemm_plan(a, b, tile=8, group=2, backend="jnp",
+                           cache=cache)
+        plan.release()
+        assert len(cache) == 0
+        p2 = spgemm_plan(a, b, tile=8, group=2, backend="jnp",
+                         cache=cache)
+        assert p2 is not plan
+        p2.execute()  # alive and serving
+
+    def test_token_hit_rebinds_block_inputs(self):
+        """Block-plan token hits must rebind this call's packed blocks —
+        never serve the previous caller's staged values silently."""
+        cache = PlanCache()
+        d_a = random_block_sparse(64, 64, (16, 16), 0.4, seed=71)
+        d_b = random_block_sparse(64, 64, (16, 16), 0.4, seed=72)
+        a1, b1 = to_bcsv(d_a, (16, 16), 2), to_bcsr(d_b, (16, 16))
+        plan = spgemm_plan(a1, b1, backend="jnp", cache=cache,
+                           pattern_token="blk")
+        a2 = BCSV(a1.blocks * 2.0, a1.brow, a1.bcol, a1.group_ptr,
+                  a1.shape, a1.group)
+        b2 = BCSR(b1.indptr, b1.indices, b1.blocks * 0.5, b1.shape)
+        p2 = spgemm_plan(a2, b2, backend="jnp", cache=cache,
+                         pattern_token="blk")
+        assert p2 is plan
+        got = p2.execute()
+        assert np.allclose(got.todense(), (d_a * 2.0) @ (d_b * 0.5),
+                           atol=1e-4)
+
+    def test_token_hit_rejects_unrebindable_input_type(self):
+        """CSR (or any other) inputs on a token hit would keep stale
+        staged values — the fast path refuses them instead."""
+        cache = PlanCache()
+        a = _int_coo(48, 40, 0.12, 75)
+        b = _int_coo(40, 48, 0.12, 76)
+        spgemm_plan(a, b, tile=8, group=2, backend="jnp", cache=cache,
+                    pattern_token="tok")
+        with pytest.raises(ValueError, match="token fast path"):
+            spgemm_plan(to_csr(a), to_csr(b), tile=8, group=2,
+                        backend="jnp", cache=cache, pattern_token="tok")
+
+    def test_stale_release_leaves_rebuilt_plan_alone(self):
+        """release() on a plan whose cache slot was evicted and rebuilt
+        must not evict (or complain about) the new live plan."""
+        cache = PlanCache(capacity=1)
+        a = _int_coo(48, 40, 0.12, 85)
+        b = _int_coo(40, 48, 0.12, 86)
+        old = spgemm_plan(a, b, tile=8, group=2, backend="jnp",
+                          cache=cache)
+        a2 = _int_coo(48, 40, 0.2, 87)
+        b2 = _int_coo(40, 48, 0.2, 88)
+        spgemm_plan(a2, b2, tile=8, group=2, backend="jnp", cache=cache)
+        fresh = spgemm_plan(a, b, tile=8, group=2, backend="jnp",
+                            cache=cache)  # rebuilt under old's key
+        assert fresh is not old
+        old.release()
+        assert len(cache) == 1  # fresh survived
+        assert spgemm_plan(a, b, tile=8, group=2, backend="jnp",
+                           cache=cache) is fresh
