@@ -36,10 +36,18 @@ def run(quiet: bool = False):
     vmem = (g * bm * bn * 4 + 2 * bk * bn * 4 + 2 * bm * bk * 4) / 2**20
     print(f"arch_params,tpu_v5e_vmem_MiB,{vmem:.1f} (budget "
           f"{TPU_V5E.vmem_bytes * 0.7 / 2**20:.1f})")
+    return {
+        "arria10_gx": {"SW": sw, "NUM_PE": num_pe,
+                       "matches_paper": (sw, num_pe) == (16, 32)},
+        "2x_bandwidth_board": {"SW": sw2, "NUM_PE": pe2},
+        "modeled_runtime_2GFLOP_ms": r * 1e3,
+        "tpu_v5e_tiles": {"bm": bm, "bk": bk, "bn": bn, "G": g},
+        "tpu_v5e_vmem_MiB": vmem,
+    }
 
 
 def main():
-    run()
+    return run()
 
 
 if __name__ == "__main__":

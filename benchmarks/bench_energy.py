@@ -21,7 +21,7 @@ from repro.core.perfmodel import (
 def run(quiet: bool = False):
     print("energy,matrix,fpga_J(modeled),cpu_J(modeled),gpu_J(modeled),"
           "paper_mkl_J,paper_cusparse_J,paper_fspgemm_J")
-    red_cpu, red_gpu = [], []
+    red_cpu, red_gpu, rows = [], [], []
     for name in PAPER_MATRICES:
         t = PAPER_TABLE7_MS[name]
         e_fpga = energy(t["fspgemm"] / 1e3, FPGA_ARRIA10)
@@ -30,16 +30,27 @@ def run(quiet: bool = False):
         p = PAPER_TABLE9_J[name]
         red_cpu.append(p["mkl"] / p["fspgemm"])
         red_gpu.append(p["cusparse"] / p["fspgemm"])
+        rows.append({
+            "matrix": name, "fpga_J": e_fpga, "cpu_J": e_cpu,
+            "gpu_J": e_gpu, "paper_mkl_J": p["mkl"],
+            "paper_cusparse_J": p["cusparse"],
+            "paper_fspgemm_J": p["fspgemm"],
+        })
         print(f"energy,{name},{e_fpga:.3f},{e_cpu:.2f},{e_gpu:.2f},"
               f"{p['mkl']},{p['cusparse']},{p['fspgemm']}")
     print(f"energy,paper_avg_reduction_vs_cpu,{sum(red_cpu)/len(red_cpu):.1f}"
           f" (paper reports 31.9x)")
     print(f"energy,paper_avg_reduction_vs_gpu,{sum(red_gpu)/len(red_gpu):.1f}"
           f" (paper reports 13.1x)")
+    return {
+        "rows": rows,
+        "avg_reduction_vs_cpu": sum(red_cpu) / len(red_cpu),
+        "avg_reduction_vs_gpu": sum(red_gpu) / len(red_gpu),
+    }
 
 
 def main():
-    run()
+    return run()
 
 
 if __name__ == "__main__":

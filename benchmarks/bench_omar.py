@@ -43,7 +43,7 @@ def run(scale: float = 1.0, quiet: bool = False):
 
 
 def main():
-    run()
+    return run()
 
 
 if __name__ == "__main__":

@@ -54,7 +54,7 @@ def run(scale: float = 0.05, quiet: bool = False):
 
 
 def main():
-    run()
+    return run()
 
 
 if __name__ == "__main__":

@@ -52,7 +52,7 @@ def run(scale: float = 0.02, sim_scale: float = 0.01, quiet: bool = False):
 
 
 def main():
-    run()
+    return run()
 
 
 if __name__ == "__main__":

@@ -115,7 +115,7 @@ def report(art_dir: str = ART_DIR, mesh: str = "pod16x16") -> List[Dict]:
 
 
 def main():
-    report()
+    return report()
 
 
 if __name__ == "__main__":

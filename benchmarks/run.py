@@ -1,15 +1,26 @@
 """Benchmark driver: one section per paper table/figure + the roofline
 report. ``PYTHONPATH=src python -m benchmarks.run``
 
+Each section writes a machine-readable ``BENCH_<slug>.json`` next to its
+stdout report (default ``benchmarks/out/``, override with ``--out-dir``)
+so the perf trajectory is tracked across PRs: the payload carries the
+section's returned rows/dict (``data``), wall time, and ok/error status.
+
 Exits nonzero when any section fails so CI can gate on it."""
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import re
 import sys
+import time
 import traceback
 
 from benchmarks import (
     bench_arch_params,
     bench_energy,
+    bench_gateway,
     bench_kernels,
     bench_omar,
     bench_runtime,
@@ -30,20 +41,70 @@ SECTIONS = [
     ("Kernel schedule metrics",
      lambda: bench_kernels.main(
          ["--devices", "4", "--pipeline-depth", "1,2,4"])),
+    ("Gateway serving — throughput/latency", bench_gateway.main),
     ("Roofline (from dry-run artifacts)", roofline.main),
 ]
 
 
-def main() -> None:
+def _slug(title: str) -> str:
+    """'Table 7 — runtime' -> 'table_7_runtime' (filename-safe)."""
+    return re.sub(r"_+", "_", re.sub(r"[^a-z0-9]+", "_", title.lower())).strip("_")
+
+
+def _jsonable(obj):
+    """Best-effort JSON coercion: numpy scalars/arrays, tuples, dataclass
+    reprs — anything stranger degrades to str rather than failing the
+    section after it already ran."""
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return obj
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple, set)):
+        return [_jsonable(v) for v in obj]
+    if hasattr(obj, "item") and callable(obj.item):  # numpy scalar
+        try:
+            return obj.item()
+        except Exception:
+            pass
+    if hasattr(obj, "tolist") and callable(obj.tolist):  # numpy array
+        try:
+            return obj.tolist()
+        except Exception:
+            pass
+    return str(obj)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("benchmarks", "out"),
+                    help="directory for BENCH_<section>.json artifacts")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on section titles")
+    args = ap.parse_args(argv)
+    os.makedirs(args.out_dir, exist_ok=True)
+
     failures = []
     for title, fn in SECTIONS:
+        if args.only and args.only.lower() not in title.lower():
+            continue
         print(f"\n=== {title} " + "=" * max(1, 60 - len(title)))
+        rec = {"section": title, "ok": True, "elapsed_s": None,
+               "data": None, "error": None,
+               "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z")}
+        t0 = time.perf_counter()
         try:
-            fn()
+            rec["data"] = _jsonable(fn())
         except Exception as e:
             failures.append(title)
+            rec["ok"] = False
+            rec["error"] = f"{type(e).__name__}: {e}"
             print(f"SECTION FAILED: {type(e).__name__}: {e}")
             traceback.print_exc()
+        rec["elapsed_s"] = time.perf_counter() - t0
+        path = os.path.join(args.out_dir, f"BENCH_{_slug(title)}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2)
+        print(f"[bench] wrote {path} ({rec['elapsed_s']:.1f}s)")
     print("\n=== benchmarks done"
           + (f" ({len(failures)} section(s) failed: {failures})"
              if failures else " (all sections passed)"))

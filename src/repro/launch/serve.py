@@ -11,7 +11,8 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from collections import deque
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +34,9 @@ class Request:
     max_new: int
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # Slot-local prompt cursor, advanced one token per decode step while
+    # the request occupies a slot.
+    cursor: int = 0
 
 
 class BatchedServer:
@@ -55,7 +59,9 @@ class BatchedServer:
         self.cache = tr.init_cache(cfg, batch_slots, max_seq)
         self.active: Dict[int, Request] = {}
         self.slot_of: Dict[int, int] = {}
-        self.pending: List[Request] = []
+        # FIFO admission queue; deque so slot assignment pops O(1) instead
+        # of list.pop(0)'s O(n) under deep backlogs.
+        self.pending: Deque[Request] = deque()
         self.tokens = np.zeros((batch_slots, 1), np.int32)
         self.stats = {"steps": 0, "tokens": 0}
 
@@ -65,12 +71,11 @@ class BatchedServer:
     def _assign_slots(self) -> None:
         free = [s for s in range(self.slots) if s not in self.slot_of.values()]
         while free and self.pending:
-            req = self.pending.pop(0)
+            req = self.pending.popleft()
             slot = free.pop(0)
             self.active[req.rid] = req
             self.slot_of[req.rid] = slot
-            # slot-local prompt cursor
-            req._cursor = 0  # type: ignore[attr-defined]
+            req.cursor = 0
 
     def run_until_done(self, max_steps: int = 10_000) -> List[Request]:
         """Decode until all submitted requests complete."""
@@ -83,9 +88,8 @@ class BatchedServer:
                 # Feed each slot its next input token (prompt or generated).
                 for rid, req in self.active.items():
                     s = self.slot_of[rid]
-                    cur = req._cursor  # type: ignore[attr-defined]
-                    if cur < len(req.prompt):
-                        self.tokens[s, 0] = req.prompt[cur]
+                    if req.cursor < len(req.prompt):
+                        self.tokens[s, 0] = req.prompt[req.cursor]
                     # else keep the last generated token already in place
                 logits, self.cache = self.step(
                     self.params, self.cache, jnp.asarray(self.tokens)
@@ -95,8 +99,8 @@ class BatchedServer:
                 done_now = []
                 for rid, req in self.active.items():
                     s = self.slot_of[rid]
-                    cur = req._cursor  # type: ignore[attr-defined]
-                    req._cursor = cur + 1  # type: ignore[attr-defined]
+                    cur = req.cursor
+                    req.cursor = cur + 1
                     if cur >= len(req.prompt) - 1:
                         # This step produced a generated token for the slot.
                         req.out.append(int(nxt[s]))

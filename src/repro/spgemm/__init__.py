@@ -85,6 +85,30 @@ path:
   Files carry a format-version header, the full cache key, and a payload
   digest; anything stale or corrupt degrades to a silent fresh build.
 
+**Multi-tenant serving gateway** (``repro.spgemm.gateway``): the front
+end above per-plan pipelines for many tenants hammering many patterns
+concurrently. :class:`~repro.spgemm.gateway.SpGEMMGateway` resolves each
+registered pattern through the cache (``pattern_token`` fast key),
+micro-batches same-pattern requests arriving within a bounded window
+into single ``execute_batch``-semantics pipeline submissions (results
+stay bitwise-equal to per-request ``plan.execute``), schedules fairly
+across patterns by deficit round-robin over pending **value bytes** on a
+bounded pool of live pipelines (pool eviction never tears down a
+pipeline with in-flight tickets), and sheds overload as explicit typed
+outcomes (:class:`~repro.spgemm.gateway.Outcome`: queue-full, in-flight
+byte budget, plan-cache byte pressure, closed) instead of raising from
+the executor. Per-pattern queue depth, batch-fill, p50/p99 latency,
+throughput, and shed counts are recorded in a
+:class:`~repro.runtime.heartbeat.MetricsRegistry` and snapshotted by
+``gateway.stats()``::
+
+    gw = SpGEMMGateway(max_pipelines=4, depth=2, max_batch=8,
+                       max_inflight_bytes=64 << 20)
+    gw.register("tenant0/layer3", a, b, tile=16, group=2)
+    ticket = gw.submit("tenant0/layer3", a_vals, b_vals)
+    res = ticket.wait()        # typed GatewayResult (never raises on shed)
+    gw.close()                 # drains admitted work by default
+
 ``repro.kernels.ops.spgemm`` is a thin compatibility shim over this
 package.
 """
@@ -96,6 +120,13 @@ from repro.spgemm.cache import (
 )
 from repro.spgemm.persist import PLAN_DIR_ENV, PlanStore
 from repro.spgemm.executor import ShardedSpGEMMExecutor, SpGEMMExecutor
+from repro.spgemm.gateway import (
+    GatewayResult,
+    GatewayShed,
+    GatewayTicket,
+    Outcome,
+    SpGEMMGateway,
+)
 from repro.spgemm.pipeline import (
     PipelineFullError,
     SpGEMMPipeline,
@@ -112,6 +143,10 @@ from repro.spgemm.plan import (
 
 __all__ = [
     "CacheStats",
+    "GatewayResult",
+    "GatewayShed",
+    "GatewayTicket",
+    "Outcome",
     "PLAN_DIR_ENV",
     "PipelineFullError",
     "PlanCache",
@@ -120,6 +155,7 @@ __all__ = [
     "ShardedSpGEMMExecutor",
     "ShardedSpGEMMPlan",
     "SpGEMMExecutor",
+    "SpGEMMGateway",
     "SpGEMMPipeline",
     "SpGEMMPlan",
     "SpGEMMTicket",

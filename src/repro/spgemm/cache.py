@@ -180,6 +180,16 @@ class PlanCache:
         with self._lock:
             return self._bytes
 
+    @property
+    def over_budget(self) -> bool:
+        """True when resident plan bytes exceed ``max_bytes`` — possible
+        because the newest plan is always kept and plans with in-flight
+        pipeline steps are pinned against LRU eviction. Always False
+        without a byte budget. This is the cache-pressure admission
+        signal serving front ends (the gateway) shed on."""
+        with self._lock:
+            return self.max_bytes is not None and self._bytes > self.max_bytes
+
     def _plan_size(self, plan) -> int:
         size = getattr(plan, "host_nbytes", None)
         return int(size()) if callable(size) else 0

@@ -170,6 +170,20 @@ class SpGEMMPipeline:
         with self._lock:
             return len(self._steps)
 
+    @property
+    def free_slots(self) -> int:
+        """Submissions currently possible without
+        :class:`PipelineFullError` (0 once closed).
+
+        Advisory under concurrency in general, but exact for a
+        single-submitter arrangement (the gateway's dispatcher): collects
+        only *free* slots, so the value cannot shrink between a check and
+        that submitter's next ``submit``."""
+        with self._lock:
+            if self._closed:
+                return 0
+            return max(0, self.depth - len(self._steps))
+
     def __len__(self) -> int:
         return self.in_flight
 

@@ -553,6 +553,27 @@ class SpGEMMPlan:
             )
         return vals
 
+    def value_shapes(self) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+        """Per-set operand shapes the numeric phase accepts:
+        ``(want_a, want_b)`` — ``[nnz]`` vectors for element plans, packed
+        block arrays for block plans. ``execute_batch``/``submit`` take the
+        same shapes with a shared leading batch axis. This is the
+        validation contract serving front ends (the gateway) check
+        requests against before queueing them."""
+        if self._a_scatter is not None and self._b_scatter is not None:
+            return (self.report.nnz_a,), (self.report.nnz_b,)
+        return self._a_shape, self._b_shape
+
+    def value_nbytes(self) -> int:
+        """Bytes of one request's operand values (a_vals + b_vals at the
+        plan's packed dtypes) — the admission-control unit the gateway's
+        in-flight byte budget counts."""
+        want_a, want_b = self.value_shapes()
+        return (
+            int(np.prod(want_a)) * self._a_dtype.itemsize
+            + int(np.prod(want_b)) * self._b_dtype.itemsize
+        )
+
     def _empty_csr(self) -> CSR:
         return CSR(
             np.zeros(self._m + 1, np.int64), np.zeros(0, np.int32),
@@ -643,11 +664,7 @@ class SpGEMMPlan:
         a_vals = np.asarray(a_vals)
         b_vals = np.asarray(b_vals)
         rebind = self._a_scatter is not None and self._b_scatter is not None
-        if rebind:
-            want_a = (self.report.nnz_a,)
-            want_b = (self.report.nnz_b,)
-        else:
-            want_a, want_b = self._a_shape, self._b_shape
+        want_a, want_b = self.value_shapes()
         if a_vals.ndim != len(want_a) + 1 or a_vals.shape[1:] != want_a:
             raise ValueError(
                 f"a_vals: expected [batch, {', '.join(map(str, want_a))}], "
@@ -776,11 +793,7 @@ class SpGEMMPlan:
         a_vals = np.asarray(a_vals)
         b_vals = np.asarray(b_vals)
         rebind = self._a_scatter is not None and self._b_scatter is not None
-        if rebind:
-            want_a = (self.report.nnz_a,)
-            want_b = (self.report.nnz_b,)
-        else:
-            want_a, want_b = self._a_shape, self._b_shape
+        want_a, want_b = self.value_shapes()
         single = a_vals.shape == want_a and b_vals.shape == want_b
         batched = (
             a_vals.ndim == len(want_a) + 1 and a_vals.shape[1:] == want_a

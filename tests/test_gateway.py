@@ -1,0 +1,377 @@
+"""Multi-tenant serving gateway semantics.
+
+The load-bearing invariants, in order of importance:
+
+1. **Bitwise equality** — every admitted request's result equals a
+   direct ``plan.execute`` of the same values, regardless of how it was
+   micro-batched or interleaved with other tenants.
+2. **Typed overload** — queue-full / byte-budget / cache-pressure /
+   closed conditions resolve tickets with shed outcomes; they never hang
+   and never raise out of the scheduler.
+3. **Fairness** — a hot tenant's backlog cannot starve a cold tenant
+   (deficit round-robin by pending value bytes).
+4. **Pin guard** — pool eviction never tears down a pipeline with
+   in-flight tickets.
+
+Sharded coverage runs under 8 forced host devices via the
+subprocess-safe ``forced_devices`` fixture (tests/conftest.py).
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.data.pipeline import SpGEMMValueStream
+from repro.sparse.convert import to_bcsr, to_bcsv
+from repro.sparse.random import random_block_sparse, random_coo
+from repro.spgemm import (
+    GatewayShed,
+    Outcome,
+    PlanCache,
+    SpGEMMGateway,
+    SpGEMMPipeline,
+)
+
+WAIT = 120  # generous per-ticket timeout: CPU jit compiles per batch size
+
+
+def _patterns(seed=0, m=96, k=72, n=80, density=0.06):
+    a = random_coo(m, k, density, "uniform", seed=seed).sum_duplicates()
+    b = random_coo(k, n, density, "uniform", seed=seed + 1).sum_duplicates()
+    return a, b
+
+
+def _gateway(**kw):
+    kw.setdefault("cache", PlanCache())
+    return SpGEMMGateway(**kw)
+
+
+def _assert_same_csr(x, y):
+    assert np.array_equal(x.indptr, y.indptr)
+    assert np.array_equal(x.indices, y.indices)
+    assert np.array_equal(x.data, y.data)
+
+
+class TestResults:
+    def test_bitwise_equal_direct_execute_two_patterns(self):
+        gw = _gateway(max_pipelines=2, depth=2, max_batch=4,
+                      batch_window=0.002)
+        p0 = gw.register("p0", *_patterns(0), tile=8, group=2, backend="jnp")
+        p1 = gw.register("p1", *_patterns(4, m=64, k=64, n=64, density=0.08),
+                         tile=8, group=2, backend="jnp")
+        s0 = SpGEMMValueStream(p0.a_pattern, p0.b_pattern, seed=7)
+        s1 = SpGEMMValueStream(p1.a_pattern, p1.b_pattern, seed=8)
+        tickets = []
+        for s in range(8):
+            tickets.append(("p0", s, gw.submit("p0", *s0.values_at(s))))
+            tickets.append(("p1", s, gw.submit("p1", *s1.values_at(s))))
+        results = [(tok, s, t.wait(timeout=WAIT)) for tok, s, t in tickets]
+        gw.close()
+        assert all(r.outcome is Outcome.OK for _, _, r in results)
+        for tok, s, r in results:
+            plan, st = (p0, s0) if tok == "p0" else (p1, s1)
+            _assert_same_csr(plan.execute(*st.values_at(s)), r.value)
+
+    def test_micro_batching_fills_batches(self):
+        """A burst queued before the scheduler starts dispatches as full
+        micro-batches: fill == max_batch, dispatches == burst/max_batch."""
+        gw = _gateway(max_batch=4, start=False)
+        plan = gw.register("p", *_patterns(0), tile=8, group=2,
+                           backend="jnp")
+        st = SpGEMMValueStream(plan.a_pattern, plan.b_pattern, seed=7)
+        tickets = [gw.submit("p", *st.values_at(s)) for s in range(8)]
+        gw.start()
+        assert all(t.wait(WAIT).outcome is Outcome.OK for t in tickets)
+        stats = gw.stats()["patterns"]["p"]
+        gw.close()
+        assert stats["dispatches"] == 2
+        assert stats["batched_requests"] == 8
+        assert stats["batch_fill"] == 4.0
+
+    def test_block_plan_requests(self):
+        """Packed-block operands flow through the same queue/batch path."""
+        ad = random_block_sparse(128, 128, (32, 32), 0.3, seed=3)
+        bd = random_block_sparse(128, 128, (32, 32), 0.3, seed=4)
+        cache = PlanCache()
+        from repro.spgemm import spgemm_plan
+
+        plan = spgemm_plan(to_bcsv(ad, (32, 32), 2), to_bcsr(bd, (32, 32)),
+                           backend="jnp", cache=cache)
+        gw = _gateway(cache=cache, max_batch=2)
+        gw.register_plan("blk", plan)
+        rng = np.random.default_rng(0)
+        wa, wb = plan.value_shapes()
+        sets = [
+            (rng.standard_normal(wa).astype(np.float32),
+             rng.standard_normal(wb).astype(np.float32))
+            for _ in range(3)
+        ]
+        tickets = [gw.submit("blk", a, b) for a, b in sets]
+        results = [t.wait(WAIT) for t in tickets]
+        gw.close()
+        assert all(r.outcome is Outcome.OK for r in results)
+        for (a, b), r in zip(sets, results):
+            _assert_same_csr(plan.execute(a, b), r.value)
+
+    def test_ticket_api_and_validation(self):
+        gw = _gateway(start=False)
+        plan = gw.register("p", *_patterns(0), tile=8, group=2,
+                           backend="jnp")
+        st = SpGEMMValueStream(plan.a_pattern, plan.b_pattern, seed=7)
+        with pytest.raises(KeyError):
+            gw.submit("nope", *st.values_at(0))
+        with pytest.raises(ValueError):
+            gw.submit("p", np.zeros(3, np.float32), np.zeros(3, np.float32))
+        t = gw.submit("p", *st.values_at(0))
+        assert not t.done()
+        with pytest.raises(TimeoutError):
+            t.wait(timeout=0.01)
+        gw.start()
+        res = t.wait(WAIT)
+        assert res.outcome is Outcome.OK and res.latency_s > 0
+        assert t.result() is res.value  # resolved: no blocking, no raise
+        gw.close()
+
+    def test_duplicate_registration(self):
+        gw = _gateway(start=False)
+        a, b = _patterns(0)
+        plan = gw.register("p", a, b, tile=8, group=2, backend="jnp")
+        assert gw.register("p", a, b, tile=8, group=2, backend="jnp") is plan
+        other = gw.register("q", *_patterns(4), tile=8, group=2,
+                            backend="jnp")
+        with pytest.raises(ValueError):
+            gw.register_plan("p", other)
+        gw.close()
+
+
+class TestBackpressure:
+    def test_queue_full_sheds_typed(self):
+        gw = _gateway(max_queue=2, start=False)
+        plan = gw.register("p", *_patterns(0), tile=8, group=2,
+                           backend="jnp")
+        st = SpGEMMValueStream(plan.a_pattern, plan.b_pattern, seed=7)
+        tickets = [gw.submit("p", *st.values_at(s)) for s in range(5)]
+        shed = [t for t in tickets if t.done()]
+        assert len(shed) == 3
+        assert all(
+            t.wait(0).outcome is Outcome.SHED_QUEUE_FULL for t in shed
+        )
+        with pytest.raises(GatewayShed) as ei:
+            shed[0].result()
+        assert ei.value.outcome is Outcome.SHED_QUEUE_FULL
+        gw.start()
+        for t, s in zip(tickets[:2], range(2)):  # admitted work completes
+            res = t.wait(WAIT)
+            assert res.outcome is Outcome.OK
+            _assert_same_csr(plan.execute(*st.values_at(s)), res.value)
+        stats = gw.stats()["patterns"]["p"]
+        gw.close()
+        assert stats["shed"]["shed_queue_full"] == 3
+        assert stats["shed_total"] == 3
+
+    def test_byte_budget_sheds_not_hangs(self):
+        a, b = _patterns(0)
+        cache = PlanCache()
+        from repro.spgemm import spgemm_plan
+
+        plan = spgemm_plan(a, b, tile=8, group=2, backend="jnp",
+                           cache=cache)
+        nb = plan.value_nbytes()
+        gw = _gateway(cache=cache, max_inflight_bytes=3 * nb + 16,
+                      start=False)
+        gw.register_plan("p", plan)
+        st = SpGEMMValueStream(plan.a_pattern, plan.b_pattern, seed=7)
+        tickets = [gw.submit("p", *st.values_at(s)) for s in range(6)]
+        outcomes = [t.wait(0).outcome if t.done() else None for t in tickets]
+        assert outcomes.count(Outcome.SHED_BYTES) == 3
+        gw.start()
+        done = [t.wait(WAIT) for t in tickets]
+        gw.close()
+        ok = [r for r in done if r.outcome is Outcome.OK]
+        assert len(ok) == 3  # every admitted request resolved OK
+        for s, r in enumerate(done[:3]):
+            _assert_same_csr(plan.execute(*st.values_at(s)), r.value)
+
+    def test_cache_pressure_sheds(self):
+        cache = PlanCache(max_bytes=1)  # any plan overflows: newest kept
+        gw = _gateway(cache=cache, start=False)
+        plan = gw.register("p", *_patterns(0), tile=8, group=2,
+                           backend="jnp")
+        assert cache.over_budget
+        st = SpGEMMValueStream(plan.a_pattern, plan.b_pattern, seed=7)
+        t = gw.submit("p", *st.values_at(0))
+        assert t.wait(0).outcome is Outcome.SHED_CACHE_PRESSURE
+        gw.close()
+
+    def test_close_without_drain_sheds_queued(self):
+        gw = _gateway(start=False)
+        plan = gw.register("p", *_patterns(0), tile=8, group=2,
+                           backend="jnp")
+        st = SpGEMMValueStream(plan.a_pattern, plan.b_pattern, seed=7)
+        tickets = [gw.submit("p", *st.values_at(s)) for s in range(3)]
+        gw.close(drain=False)
+        assert all(
+            t.wait(0).outcome is Outcome.SHED_CLOSED for t in tickets
+        )
+        t = gw.submit("p", *st.values_at(9))  # post-close submit: shed too
+        assert t.wait(0).outcome is Outcome.SHED_CLOSED
+
+    def test_context_manager_drains(self):
+        with _gateway(max_batch=4) as gw:
+            plan = gw.register("p", *_patterns(0), tile=8, group=2,
+                               backend="jnp")
+            st = SpGEMMValueStream(plan.a_pattern, plan.b_pattern, seed=7)
+            tickets = [gw.submit("p", *st.values_at(s)) for s in range(4)]
+        assert all(t.wait(0).outcome is Outcome.OK for t in tickets)
+
+
+class TestFairness:
+    def test_hot_tenant_cannot_starve_cold(self):
+        """32 hot requests queued ahead of 2 cold ones: DRR by bytes must
+        complete the cold pattern long before the hot backlog drains."""
+        gw = _gateway(max_pipelines=2, max_batch=4, batch_window=0.0,
+                      start=False)
+        hot = gw.register("hot", *_patterns(0), tile=8, group=2,
+                          backend="jnp")
+        cold = gw.register("cold", *_patterns(4), tile=8, group=2,
+                           backend="jnp")
+        sh = SpGEMMValueStream(hot.a_pattern, hot.b_pattern, seed=7)
+        sc = SpGEMMValueStream(cold.a_pattern, cold.b_pattern, seed=8)
+        hot_t = [gw.submit("hot", *sh.values_at(s)) for s in range(32)]
+        cold_t = [gw.submit("cold", *sc.values_at(s)) for s in range(2)]
+        gw.start()
+        hot_seq = [t.wait(WAIT).seq for t in hot_t]
+        cold_seq = [t.wait(WAIT).seq for t in cold_t]
+        stats = gw.stats()
+        gw.close()
+        # Cold completes within the first rounds, not after the backlog.
+        assert max(cold_seq) < 0.5 * max(hot_seq), (cold_seq, max(hot_seq))
+        assert stats["patterns"]["hot"]["completed"] == 32
+        assert stats["patterns"]["cold"]["completed"] == 2
+        assert stats["patterns"]["hot"]["throughput_rps"] > 0
+        assert stats["patterns"]["cold"]["latency_s"]["p99"] > 0
+
+
+class TestPipelinePool:
+    def test_pool_eviction_bounded_and_counted(self):
+        gw = _gateway(max_pipelines=1, max_batch=2, batch_window=0.0)
+        pA = gw.register("A", *_patterns(0), tile=8, group=2, backend="jnp")
+        pB = gw.register("B", *_patterns(4), tile=8, group=2, backend="jnp")
+        sA = SpGEMMValueStream(pA.a_pattern, pA.b_pattern, seed=7)
+        sB = SpGEMMValueStream(pB.a_pattern, pB.b_pattern, seed=8)
+        tickets = []
+        for s in range(6):
+            tickets.append(gw.submit("A", *sA.values_at(s)))
+            tickets.append(gw.submit("B", *sB.values_at(s)))
+        assert all(t.wait(WAIT).outcome is Outcome.OK for t in tickets)
+        stats = gw.stats()
+        gw.close()
+        assert stats["pipelines_live"] <= 1
+        assert stats["pipeline_evictions"] >= 1
+
+    def test_eviction_never_tears_down_inflight_pipeline(self):
+        """The PR-5 pin guard at gateway level: with the pool exhausted by
+        a busy pipeline, another pattern's work WAITS — the busy
+        pipeline's ticket stays collectable, nothing is discarded."""
+        gw = _gateway(max_pipelines=1, batch_window=0.0, start=False)
+        pA = gw.register("A", *_patterns(0), tile=8, group=2, backend="jnp")
+        pB = gw.register("B", *_patterns(4), tile=8, group=2, backend="jnp")
+        sA = SpGEMMValueStream(pA.a_pattern, pA.b_pattern, seed=7)
+        sB = SpGEMMValueStream(pB.a_pattern, pB.b_pattern, seed=8)
+        # Occupy the whole pool with a busy pipeline (1 in-flight ticket).
+        stA = gw._states["A"]
+        stA.pipeline = SpGEMMPipeline(pA, depth=2)
+        gw._pipelines_live = 1
+        ta = stA.pipeline.submit(*sA.values_at(0))
+        tb = gw.submit("B", *sB.values_at(0))
+        gw.start()
+        time.sleep(0.25)  # many dispatch rounds: B must still be waiting
+        assert not tb.done()
+        assert stA.pipeline is gw._states["A"].pipeline  # not torn down
+        assert stA.pipeline.in_flight == 1
+        ca = stA.pipeline.collect(ta)  # the pinned ticket still redeems
+        _assert_same_csr(pA.execute(*sA.values_at(0)), ca)
+        res = tb.wait(WAIT)  # freed slot: B now evicts idle A and runs
+        gw.close()
+        assert res.outcome is Outcome.OK
+        _assert_same_csr(pB.execute(*sB.values_at(0)), res.value)
+
+
+class TestConcurrentSubmitters:
+    def test_threads_submit_concurrently(self):
+        gw = _gateway(max_pipelines=2, max_batch=4, batch_window=0.002)
+        p0 = gw.register("p0", *_patterns(0), tile=8, group=2,
+                         backend="jnp")
+        p1 = gw.register("p1", *_patterns(4), tile=8, group=2,
+                         backend="jnp")
+        streams = {
+            "p0": SpGEMMValueStream(p0.a_pattern, p0.b_pattern, seed=7),
+            "p1": SpGEMMValueStream(p1.a_pattern, p1.b_pattern, seed=8),
+        }
+        results = {}
+        lock = threading.Lock()
+
+        def tenant(tid, token):
+            for s in range(6):
+                step = tid * 100 + s
+                t = gw.submit(token, *streams[token].values_at(step))
+                r = t.wait(WAIT)
+                with lock:
+                    results[(token, step)] = r
+
+        threads = [
+            threading.Thread(target=tenant, args=(i, tok))
+            for i, tok in enumerate(["p0", "p1", "p0", "p1"])
+        ]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        gw.close()
+        assert len(results) == 24
+        assert all(r.outcome is Outcome.OK for r in results.values())
+        for (token, step), r in results.items():
+            plan = p0 if token == "p0" else p1
+            _assert_same_csr(
+                plan.execute(*streams[token].values_at(step)), r.value
+            )
+
+
+class TestShardedGateway:
+    def test_gateway_over_sharded_plan(self, forced_devices):
+        """Gateway requests against a mesh-sharded plan reproduce the
+        plan's own execute bitwise (8 forced host devices, 4-way shard)."""
+        out = forced_devices(
+            """
+            import numpy as np
+            from repro.data.pipeline import SpGEMMValueStream
+            from repro.launch.mesh import make_shard_mesh
+            from repro.sparse.random import random_coo
+            from repro.spgemm import (
+                Outcome, PlanCache, SpGEMMGateway, spgemm_plan,
+            )
+
+            a = random_coo(96, 72, 0.06, "uniform", seed=0).sum_duplicates()
+            b = random_coo(72, 80, 0.06, "uniform", seed=1).sum_duplicates()
+            cache = PlanCache()
+            plan = spgemm_plan(a, b, tile=8, group=2, backend="jnp",
+                               cache=cache, mesh=make_shard_mesh(4))
+            gw = SpGEMMGateway(cache=cache, max_batch=2, batch_window=0.0)
+            gw.register_plan("sharded", plan)
+            st = SpGEMMValueStream(plan.a_pattern, plan.b_pattern, seed=7)
+            tickets = [gw.submit("sharded", *st.values_at(s))
+                       for s in range(4)]
+            results = [t.wait(timeout=180) for t in tickets]
+            gw.close()
+            assert all(r.outcome is Outcome.OK for r in results)
+            for s, r in enumerate(results):
+                c = plan.execute(*st.values_at(s))
+                assert np.array_equal(c.indptr, r.value.indptr)
+                assert np.array_equal(c.indices, r.value.indices)
+                assert np.array_equal(c.data, r.value.data)
+            print("sharded-gateway-ok")
+            """,
+            devices=8,
+        )
+        assert "sharded-gateway-ok" in out

@@ -226,3 +226,96 @@ class TestStragglerAndHeartbeat:
         peers = check_peers(str(tmp_path), timeout=5.0)
         assert peers["alive"] == ["h0"]
         assert check_peers(str(tmp_path), timeout=0.0)["dead"] == ["h0"]
+
+    def test_heartbeat_restarts_after_stop(self, tmp_path):
+        """start() after stop() must beat again: the stop event is reset,
+        not silently reused (the old bug left the thread exiting on its
+        first wait and the file going stale forever)."""
+        import json
+        import time
+
+        hb = Heartbeat(str(tmp_path), host="h0", interval=0.02)
+        hb.start()
+        hb.stop()
+        with open(hb.path) as f:
+            t_stopped = json.load(f)["time"]
+        time.sleep(0.05)
+        hb.start()  # second lifecycle
+        try:
+            deadline = time.time() + 2.0
+            while time.time() < deadline:
+                with open(hb.path) as f:
+                    if json.load(f)["time"] > t_stopped:
+                        break
+                time.sleep(0.02)
+            with open(hb.path) as f:
+                assert json.load(f)["time"] > t_stopped, (
+                    "restarted heartbeat never beat again"
+                )
+        finally:
+            hb.stop()
+
+    def test_heartbeat_start_while_running_raises(self, tmp_path):
+        hb = Heartbeat(str(tmp_path), host="h0", interval=5.0)
+        hb.start()
+        try:
+            with pytest.raises(RuntimeError):
+                hb.start()
+        finally:
+            hb.stop()
+
+    def test_heartbeat_carries_metrics(self, tmp_path):
+        import json
+
+        from repro.runtime.heartbeat import MetricsRegistry
+
+        reg = MetricsRegistry()
+        reg.counter("served").inc(3)
+        reg.gauge("depth").set(2.5)
+        reg.summary("lat").record(0.1)
+        hb = Heartbeat(str(tmp_path), host="h0", interval=5.0, metrics=reg)
+        hb.beat()
+        with open(hb.path) as f:
+            rec = json.load(f)
+        assert rec["metrics"]["served"] == 3
+        assert rec["metrics"]["depth"] == 2.5
+        assert rec["metrics"]["lat"]["count"] == 1
+
+
+class TestMetricsRegistry:
+    def test_instruments(self):
+        from repro.runtime.heartbeat import MetricsRegistry
+
+        reg = MetricsRegistry()
+        c = reg.counter("c")
+        c.inc()
+        c.inc(4)
+        assert reg.counter("c") is c and c.value == 5
+        g = reg.gauge("g")
+        g.set(7)
+        assert g.value == 7.0
+        s = reg.summary("s", window=8)
+        for v in range(100):
+            s.record(float(v))
+        snap = s.snapshot()
+        assert snap["count"] == 100  # lifetime count survives the window
+        assert snap["p50"] >= 92.0  # quantiles over the last 8 only
+        assert s.percentile(100.0) == 99.0
+
+    def test_type_conflict_raises(self):
+        from repro.runtime.heartbeat import MetricsRegistry
+
+        reg = MetricsRegistry()
+        reg.counter("x")
+        with pytest.raises(TypeError):
+            reg.gauge("x")
+
+    def test_snapshot_shapes(self):
+        from repro.runtime.heartbeat import MetricsRegistry
+
+        reg = MetricsRegistry()
+        reg.counter("a").inc()
+        reg.summary("b").record(1.0)
+        snap = reg.snapshot()
+        assert snap["a"] == 1
+        assert snap["b"]["p99"] == 1.0
