@@ -1,0 +1,55 @@
+"""Batch-fusion knee calibration (the measured basis of
+``repro.spgemm.executor._CHUNK_POLICY``).
+
+Runs :func:`repro.core.tuning.measure_chunk_knee` on the current backend:
+plans of growing per-set working bytes, each timed as one fused
+``run_batch`` call vs. one call per element, plus a chunk-size sweep on the
+smallest case for the ``cache_bytes`` knob. The reported ``knee_bytes`` is
+the number that belongs in the policy table's row for this backend — CPU
+in CI; run the same module on a TPU/GPU host to re-measure those rows
+(or override per process with ``REPRO_SPGEMM_CHUNK_BYTES``).
+
+``PYTHONPATH=src python -m benchmarks.bench_chunk_knee [--batch N]``
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core.tuning import measure_chunk_knee
+
+
+def run(batch: int = 8, repeats: int = 3, backend: str = "jnp",
+        quiet: bool = False):
+    res = measure_chunk_knee(batch=batch, repeats=repeats, backend=backend)
+    if not quiet:
+        print(f"device={res['device_backend']} plan_backend={backend} "
+              f"batch={batch}")
+        print("chunk_knee,per_set_bytes,fused_ms_per_set,split_ms_per_set,"
+              "speedup")
+        for s in res["samples"]:
+            print(f"{s['case']},{s['per_set_bytes']},"
+                  f"{s['fused_ms_per_set']:.3f},{s['split_ms_per_set']:.3f},"
+                  f"{s['speedup']:.2f}")
+        print("chunk_sweep,chunk,working_bytes,ms_per_set")
+        for c in res["chunk_sweep"]:
+            print(f"chunk_sweep,{c['chunk']},{c['working_bytes']},"
+                  f"{c['ms_per_set']:.3f}")
+        print(f"knee_bytes={res['knee_bytes']} "
+              f"suggested_policy_row={res['suggested_policy_row']} "
+              f"configured_policy_row={res['configured_policy_row']}")
+    return res
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--backend", default="jnp",
+                    help="plan backend to calibrate (jnp here matches the "
+                         "policy's CPU row; pallas on a real TPU)")
+    args = ap.parse_args(argv)
+    return run(batch=args.batch, repeats=args.repeats, backend=args.backend)
+
+
+if __name__ == "__main__":
+    main()

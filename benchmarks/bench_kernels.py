@@ -38,6 +38,7 @@ _SHARDED_CASES = (
 
 
 def run(quiet: bool = False, devices: int = 0, pipeline_depths=(1, 2, 4)):
+    data = {}
     print("kernels,case,triples,b_fetches,block_omar_pct,flops,"
           "bytes_streamed,arith_intensity,plan_ms,execute_ms")
     for (m, k, n, da, db, g) in [
@@ -143,6 +144,8 @@ def run(quiet: bool = False, devices: int = 0, pipeline_depths=(1, 2, 4)):
               f"resident_plans={cs['resident_plans']},"
               f"resident_bytes={cs['resident_bytes']}")
 
+    data["pallas_batch"] = _pallas_batch_section()
+
     _persistence_section()
 
     if pipeline_depths:
@@ -150,6 +153,52 @@ def run(quiet: bool = False, devices: int = 0, pipeline_depths=(1, 2, 4)):
 
     if devices > 1:
         _sharded_section(devices)
+    return data
+
+
+def _pallas_batch_section() -> dict:
+    """Batch-folded Pallas grid: ``execute_batch`` on a pallas_interpret
+    plan vs a loop of single-set Pallas calls — bitwise equality plus the
+    dispatch amortization the fold buys. CI gates on the returned ``ok``
+    (BENCH_kernel_schedule_metrics.json ``data.pallas_batch.ok``)."""
+    print("kernels,pallas_batch_case,batch,loop_ms,batch_ms,speedup,bitwise")
+    ad = random_block_sparse(256, 256, (32, 32), 0.35, seed=7)
+    bd = random_block_sparse(256, 256, (32, 32), 0.35, seed=8)
+    plan = spgemm_plan(ad, bd, tile=32, group=4,
+                       backend="pallas_interpret", cache=PlanCache())
+    stream = SpGEMMValueStream(plan.a_pattern, plan.b_pattern, seed=5)
+    bsz = 4
+    av, bv = stream.values_batch_at(0, batch=bsz)
+
+    def loop():
+        return [plan.execute(av[i], bv[i]) for i in range(bsz)]
+
+    def batched():
+        return plan.execute_batch(av, bv)
+
+    ref, out = loop(), batched()  # also warms both jit caches
+    bitwise = all(
+        np.array_equal(np.asarray(r.todense()), np.asarray(o.todense()))
+        for r, o in zip(ref, out)
+    )
+    loop_ms = timeit(loop, repeats=3, warmup=0) * 1e3
+    batch_ms = timeit(batched, repeats=3, warmup=0) * 1e3
+    rec = {
+        "ok": bool(bitwise),
+        "backend": "pallas_interpret",
+        "batch": bsz,
+        "num_triples": plan.report.num_triples,
+        "loop_ms": loop_ms,
+        "batch_ms": batch_ms,
+        "speedup": loop_ms / batch_ms,
+        "bitwise_equal": bool(bitwise),
+    }
+    print(f"kernels,spgemm_pallas_batch_256,{bsz},{loop_ms:.1f},"
+          f"{batch_ms:.1f},{loop_ms / batch_ms:.2f}x,{bitwise}")
+    if not bitwise:
+        raise RuntimeError(
+            "pallas batch grid diverged bitwise from looped execute")
+    return rec
 
 
 def _persistence_section() -> None:
@@ -329,8 +378,8 @@ def main(argv=None):
     depths = tuple(d for d in depths if d > 0)
     if args.sharded_worker:
         _sharded_worker(args.devices)
-    else:
-        run(devices=args.devices, pipeline_depths=depths)
+        return None
+    return run(devices=args.devices, pipeline_depths=depths)
 
 
 if __name__ == "__main__":

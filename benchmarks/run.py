@@ -17,8 +17,15 @@ import sys
 import time
 import traceback
 
+# XLA_FLAGS is read once at backend init, so the opt-in GPU preset must be
+# merged before anything below pulls in jax (xla_flags itself is jax-free).
+from repro.launch.xla_flags import maybe_apply_gpu_xla_flags
+
+maybe_apply_gpu_xla_flags()
+
 from benchmarks import (
     bench_arch_params,
+    bench_chunk_knee,
     bench_energy,
     bench_gateway,
     bench_kernels,
@@ -41,6 +48,11 @@ SECTIONS = [
     ("Kernel schedule metrics",
      lambda: bench_kernels.main(
          ["--devices", "4", "--pipeline-depth", "1,2,4"])),
+    # Measures the fused-vs-split run_batch knee on this host and reports
+    # it against the configured _CHUNK_POLICY row (the policy's data
+    # source; see repro.core.tuning.measure_chunk_knee).
+    ("Chunk-fusion knee calibration",
+     lambda: bench_chunk_knee.main(["--repeats", "2"])),
     ("Gateway serving — throughput/latency", bench_gateway.main),
     ("Roofline (from dry-run artifacts)", roofline.main),
 ]
@@ -74,8 +86,21 @@ def _jsonable(obj):
     return str(obj)
 
 
+_EPILOG = """\
+environment:
+  REPRO_GPU_XLA_FLAGS=1   merge the GPU latency-hiding/pipelining XLA_FLAGS
+                          preset (repro.launch.xla_flags) before jax starts;
+                          flags you already set in XLA_FLAGS win. No-op on
+                          CPU/TPU and by default.
+  REPRO_SPGEMM_CHUNK_BYTES=<n>  override the per-set batch-fusion budget
+                          measured by the chunk-knee calibration section.
+"""
+
+
 def main(argv=None) -> None:
-    ap = argparse.ArgumentParser(description=__doc__)
+    ap = argparse.ArgumentParser(
+        description=__doc__, epilog=_EPILOG,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--out-dir", default=os.path.join("benchmarks", "out"),
                     help="directory for BENCH_<section>.json artifacts")
     ap.add_argument("--only", default=None,

@@ -32,7 +32,7 @@ gather-multiply-scatter).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
@@ -52,6 +52,7 @@ __all__ = [
     "shard_from_group_range",
     "shards_from_bounds",
     "shards_to_bounds",
+    "stack_shard_schedules",
 ]
 
 
@@ -541,3 +542,34 @@ def shards_from_bounds(
         shard_from_group_range(schedule, bounds[i], bounds[i + 1])
         for i in range(bounds.shape[0] - 1)
     ]
+
+
+def stack_shard_schedules(
+    shards: Sequence[ScheduleShard], t_max: int, p_max: int
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Stack per-shard triple schedules into padded ``[n_shards, t_max]``
+    arrays (the sharded executor's device-resident schedule constants).
+
+    Returns ``(a_slot, b_slot, panel, sub_row, start)``. Padding triples
+    execute a real (block 0) x (block 0) matmul into the dummy panel
+    ``p_max`` — which no assembly gather reads — with ``start = 1`` so, on
+    the Pallas path, each pad zeroes the dummy accumulator before writing
+    (the same dummy-panel convention as
+    :func:`repro.kernels.gustavson_spgemm.pad_schedule_arrays`, applied
+    per shard). The ``start`` row makes every stacked shard schedule a
+    complete standalone Pallas schedule; jnp consumers simply ignore it.
+    """
+    s = len(shards)
+    a_slot = np.zeros((s, t_max), np.int32)
+    b_slot = np.zeros((s, t_max), np.int32)
+    panel = np.full((s, t_max), p_max, np.int32)
+    sub_row = np.zeros((s, t_max), np.int32)
+    start = np.ones((s, t_max), np.int32)
+    for i, sh in enumerate(shards):
+        t = sh.num_triples
+        a_slot[i, :t] = sh.schedule.a_slot
+        b_slot[i, :t] = sh.schedule.b_slot
+        panel[i, :t] = sh.schedule.panel
+        sub_row[i, :t] = sh.schedule.sub_row
+        start[i, :t] = sh.schedule.start
+    return a_slot, b_slot, panel, sub_row, start

@@ -1,6 +1,7 @@
-"""Analytical architectural-parameter models (paper Sec. 4.2.4).
+"""Architectural-parameter models + measured calibration probes.
 
-FPGA side (paper-faithful): runtime R = N_Ops / (F · SW · NUM_PE · U);
+Analytical side (paper Sec. 4.2.4) — FPGA (paper-faithful): runtime
+R = N_Ops / (F · SW · NUM_PE · U);
 subject to bandwidth  f1(SW) = sizeof(float)·SW·F ≤ C1
 and logic              f2(SW, NUM_PE) = β·SW·NUM_PE ≤ C2,
 with the paper's closed-form optimum
@@ -13,12 +14,20 @@ structure re-targeted at tile shapes — the bandwidth constraint bounds the
 streaming width (lane-aligned bn), the capacity constraint (VMEM instead of
 logic) bounds the row-group panel G·bm·bn. ``tpu_tile_params`` returns MXU-
 aligned (bm, bk, bn, G) maximizing modeled throughput.
+
+Measured side: :func:`measure_chunk_knee` calibrates the batch-fusion
+working-set budget (``repro.spgemm.executor._CHUNK_POLICY``) on the
+*current* backend by sweeping plans of growing per-set working bytes and
+timing fused vs. one-per-call batches. It is the documented re-measurement
+path for the policy table (``python -m benchmarks.bench_chunk_knee``, or
+the "Chunk-fusion knee" section of ``benchmarks/run.py``).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Tuple
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
 
 __all__ = [
     "FPGASpec",
@@ -27,6 +36,7 @@ __all__ = [
     "fpga_runtime_model",
     "TPUSpec",
     "TPU_V5E",
+    "measure_chunk_knee",
     "tpu_tile_params",
 ]
 
@@ -155,3 +165,174 @@ def tpu_tile_params(
     while footprint(g, bn) > budget and bn > spec.lane:
         bn //= 2
     return bm, bk, bn, g
+
+
+# ---------------------------------------------------------------------------
+# Measured calibration: the batch-fusion knee
+# ---------------------------------------------------------------------------
+
+# (m, k, n, density, tile, group): element-plan cases whose per-set working
+# bytes (4 * (n_panels*group + triples) * bm * bn, the batch_chunk basis)
+# ramp from ~80 KiB to ~8 MiB — well under to well over every plausible
+# CPU-cache knee, dense in the 0.25–3 MiB band where L2/L3 crossovers
+# actually land, so the sweep brackets the fused-vs-split crossover.
+_KNEE_CASES: Tuple[Tuple[int, int, int, float, int, int], ...] = (
+    (64, 64, 64, 0.03, 16, 4),
+    (96, 96, 96, 0.03, 16, 4),
+    (128, 128, 128, 0.03, 16, 4),
+    (160, 160, 160, 0.025, 16, 4),
+    (192, 192, 192, 0.025, 16, 4),
+    (224, 224, 224, 0.02, 16, 4),
+    (256, 256, 256, 0.02, 16, 4),
+    (320, 320, 320, 0.02, 16, 4),
+)
+
+
+def _random_int_coo(m: int, n: int, density: float, seed: int):
+    """Small-integer float32 COO — values exact in f32, so fused/split
+    paths are comparable bitwise as a calibration sanity check."""
+    import numpy as np
+
+    from repro.sparse.formats import COO
+
+    rng = np.random.default_rng(seed)
+    nnz = max(1, int(m * n * density))
+    return COO(
+        rng.integers(0, m, nnz),
+        rng.integers(0, n, nnz),
+        rng.integers(-3, 4, nnz).astype(np.float32),
+        (m, n),
+    ).sum_duplicates()
+
+
+def _best_ms(fn, repeats: int) -> float:
+    import numpy as np
+
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        np.asarray(fn())
+        best = min(best, (time.perf_counter() - t0) * 1e3)
+    return best
+
+
+def measure_chunk_knee(
+    batch: int = 8,
+    repeats: int = 3,
+    backend: str = "jnp",
+    cases: Optional[Sequence[Tuple[int, int, int, float, int, int]]] = None,
+    threshold: float = 1.0,
+    seed: int = 0,
+) -> Dict:
+    """Measure the batch-fusion knee for ``executor._CHUNK_POLICY``.
+
+    For each case the probe times a ``batch``-element value batch through
+    the executor's ``run_batch`` two ways — **fused** (one device call for
+    the whole batch) and **split** (one call per element, the ``chunk=1``
+    policy) — bypassing ``batch_chunk`` so the policy under test does not
+    steer its own calibration. The *knee* is the largest per-set working
+    size (``4 * per_set_rows * bn`` bytes, the exact quantity
+    ``batch_chunk`` compares against the policy budget) at which fusing
+    still wins: above it the fused accumulator working set leaves the fast
+    memory tier and per-set cost regresses.
+
+    The smallest case additionally sweeps chunk sizes (1..batch) to place
+    the second policy knob — the ``cache_bytes`` target that caps
+    ``chunk * per_set`` — at the measured throughput plateau.
+
+    Returns a JSON-able dict: per-case samples, ``knee_bytes``,
+    ``chunk_sweep``, the suggested and currently configured policy rows.
+    Run it on the backend being calibrated (CPU here; on a TPU/GPU host the
+    same probe re-measures those rows — that is the documented path for
+    updating the table).
+    """
+    import jax
+    import numpy as np
+
+    from repro.spgemm import PlanCache, spgemm_plan
+    from repro.spgemm.executor import _CHUNK_POLICY
+
+    rng = np.random.default_rng(seed)
+    cache = PlanCache()
+    samples: List[Dict] = []
+    chunk_sweep: List[Dict] = []
+    for ci, (m, k, n, density, tile, group) in enumerate(
+        cases if cases is not None else _KNEE_CASES
+    ):
+        a = _random_int_coo(m, k, density, seed=seed + 2 * ci + 1)
+        b = _random_int_coo(k, n, density, seed=seed + 2 * ci + 2)
+        plan = spgemm_plan(a, b, tile=tile, group=group, backend=backend,
+                           cache=cache)
+        ex = plan._executor
+        if ex is None:  # pragma: no cover - degenerate pattern
+            continue
+        per_set = 4 * ex._per_set_rows * ex._bn
+        av = rng.integers(-3, 4, (batch, a.val.shape[0])).astype(np.float32)
+        bv = rng.integers(-3, 4, (batch, b.val.shape[0])).astype(np.float32)
+
+        def fused():
+            return ex.run_batch(av, bv, rebind=True)
+
+        def split():
+            return [
+                ex.run_batch(av[i:i + 1], bv[i:i + 1], rebind=True)
+                for i in range(batch)
+            ]
+
+        fused(), split()  # compile both paths off the clock
+        fused_ms = _best_ms(fused, repeats) / batch
+        split_ms = _best_ms(lambda: np.concatenate(split()), repeats) / batch
+        samples.append({
+            "case": f"{m}x{k}x{n} d={density} tile={tile} g={group}",
+            "per_set_bytes": int(per_set),
+            "fused_ms_per_set": fused_ms,
+            "split_ms_per_set": split_ms,
+            "speedup": split_ms / max(fused_ms, 1e-9),
+        })
+        if ci == 0:
+            for chunk in (1, 2, 4, batch):
+                if chunk > batch:
+                    continue
+
+                def chunked():
+                    return [
+                        ex.run_batch(av[lo:lo + chunk], bv[lo:lo + chunk],
+                                     rebind=True)
+                        for lo in range(0, batch, chunk)
+                    ]
+
+                chunked()
+                ms = _best_ms(lambda: np.concatenate(chunked()), repeats)
+                chunk_sweep.append({
+                    "chunk": chunk,
+                    "ms_per_set": ms / batch,
+                    "working_bytes": int(chunk * per_set),
+                })
+
+    # Prefix rule: the knee is the last per-set size (ascending) where
+    # fusing still clears the threshold before the first regression.
+    knee = 0
+    for s in sorted(samples, key=lambda s: s["per_set_bytes"]):
+        if s["speedup"] >= threshold:
+            knee = s["per_set_bytes"]
+        else:
+            break
+    best_chunk = min(chunk_sweep, key=lambda c: c["ms_per_set"])["chunk"] \
+        if chunk_sweep else 1
+    cache_bytes = max(knee, best_chunk * (samples[0]["per_set_bytes"]
+                                          if samples else 0))
+    device = jax.default_backend()
+    return {
+        "device_backend": device,
+        "plan_backend": backend,
+        "batch": batch,
+        "repeats": repeats,
+        "threshold": threshold,
+        "samples": samples,
+        "chunk_sweep": chunk_sweep,
+        "knee_bytes": int(knee),
+        "suggested_policy_row": [int(knee), int(cache_bytes)],
+        "configured_policy_row": list(
+            _CHUNK_POLICY.get(device, _CHUNK_POLICY["cpu"])
+        ),
+    }

@@ -20,6 +20,17 @@ The schedule (core/schedule.py) is in BCSV vector-major order, so
 Scalar prefetch (PrefetchScalarGridSpec) plays the role of the load kernel's
 scheduling side-channel (A_DS of Table 1): slot/panel/sub-row indices are
 resident in SMEM before the grid body runs.
+
+**Batched variant** (:func:`spgemm_scheduled_batch_impl`): a value batch is
+folded into the grid as a leading dimension — grid ``(bsz, t_pad)``, with
+the shared triple schedule replicated per batch element through the
+BlockSpec index maps (element ``b`` reads A slot ``b * nnzb_a + a_slot[t]``
+and writes panel ``b * (n_panels + 1) + panel[t]``). The grid iterates the
+triple dimension innermost, so each element executes its full schedule
+consecutively: per-element accumulation order — and therefore the result —
+is bitwise-identical to running the single-set kernel once per element, and
+the schedule arrays themselves are staged on device once regardless of
+batch size.
 """
 from __future__ import annotations
 
@@ -34,7 +45,13 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams as _CompilerParams
 
-__all__ = ["spgemm_scheduled", "spgemm_scheduled_impl", "pad_schedule_arrays"]
+__all__ = [
+    "pad_schedule_arrays",
+    "spgemm_scheduled",
+    "spgemm_scheduled_batch",
+    "spgemm_scheduled_batch_impl",
+    "spgemm_scheduled_impl",
+]
 
 
 def _kernel(
@@ -50,8 +67,13 @@ def _kernel(
     o_ref,  # [1, G*bm, bn]
     *,
     bm: int,
+    t_dim: int = 0,
 ):
-    t = pl.program_id(0)
+    # ``t_dim`` is the grid dimension that walks the triple schedule: 0 for
+    # the single-set grid ``(t_pad,)``, 1 for the batch-folded grid
+    # ``(bsz, t_pad)`` (the schedule is shared across batch elements, so
+    # only the triple index selects into the prefetched SMEM arrays).
+    t = pl.program_id(t_dim)
     # Zero the whole panel on its first triple (paper: PE buffers reset on
     # row change / RESET token).
     @pl.when(start_ref[t] == 1)
@@ -156,4 +178,82 @@ spgemm_scheduled.__doc__ = (
     "Run the scheduled block-Gustavson SpGEMM (jitted entry point).\n\n"
     "Returns panels [n_panels, group*bm, bn] float32 (dummy panel "
     "stripped). See :func:`spgemm_scheduled_impl` for the unjitted body."
+)
+
+
+def spgemm_scheduled_batch_impl(
+    a_blocks: jax.Array,  # [bsz * nnzb_a, bm, bk] stacked packed BCSV blocks
+    b_blocks: jax.Array,  # [bsz * nnzb_b, bk, bn] stacked packed BCSR blocks
+    a_slot: jax.Array,  # [T_pad] int32, shared across the batch
+    b_slot: jax.Array,  # [T_pad] int32
+    panel: jax.Array,  # [T_pad] int32 (dummy = n_panels)
+    sub_row: jax.Array,  # [T_pad] int32 in [0, group)
+    start: jax.Array,  # [T_pad] int32 {0,1}
+    *,
+    bsz: int,
+    n_panels: int,
+    group: int,
+    interpret: bool = True,
+) -> jax.Array:
+    """Batch-folded scheduled kernel: one Pallas grid for a value batch.
+
+    The batch is the leading grid dimension — grid step ``(b, t)`` runs
+    triple ``t`` of element ``b`` against that element's slice of the
+    stacked block arrays (``[bsz * slots, ...]``, the layout the executor's
+    batched rebind already produces). Triples iterate innermost, so each
+    element's panels are visited in the same contiguous runs as the
+    single-set grid: B-block revisit-elision and single panel write-back
+    still apply per element, and results are bitwise-equal to ``bsz``
+    single-set calls.
+
+    Each element owns ``n_panels + 1`` output panels (its own dummy slot for
+    the padding triples, mirroring :func:`spgemm_scheduled_impl`). Returns
+    ``[bsz, n_panels, group*bm, bn]`` float32 with the dummies stripped.
+    """
+    t_pad = a_slot.shape[0]
+    a_slots = a_blocks.shape[0] // bsz
+    b_slots = b_blocks.shape[0] // bsz
+    bm, bk = a_blocks.shape[1], a_blocks.shape[2]
+    bn = b_blocks.shape[2]
+    stride = n_panels + 1
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(bsz, t_pad),
+        in_specs=[
+            pl.BlockSpec(
+                (1, bm, bk),
+                lambda b, t, a_s, b_s, p, sr, st: (b * a_slots + a_s[t], 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, bk, bn),
+                lambda b, t, a_s, b_s, p, sr, st: (b * b_slots + b_s[t], 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, group * bm, bn),
+            lambda b, t, a_s, b_s, p, sr, st: (b * stride + p[t], 0, 0),
+        ),
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, bm=bm, t_dim=1),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(
+            (bsz * stride, group * bm, bn), jnp.float32
+        ),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+    )(a_slot, b_slot, panel, sub_row, start, a_blocks, b_blocks)
+    return out.reshape(bsz, stride, group * bm, bn)[:, :n_panels]
+
+
+spgemm_scheduled_batch = jax.jit(
+    spgemm_scheduled_batch_impl,
+    static_argnames=("bsz", "n_panels", "group", "interpret"),
+)
+spgemm_scheduled_batch.__doc__ = (
+    "Run the batch-folded scheduled SpGEMM (jitted entry point).\n\n"
+    "Returns panels [bsz, n_panels, group*bm, bn] float32. See\n"
+    ":func:`spgemm_scheduled_batch_impl` for the unjitted body."
 )

@@ -1,0 +1,104 @@
+"""Opt-in GPU ``XLA_FLAGS`` presets for latency hiding and collective
+pipelining.
+
+The flag set follows the MaxText-style GPU recipe: turn on the latency
+hiding scheduler and the high-priority async stream so collectives overlap
+compute, raise the combine thresholds so all-reduce/all-gather/
+reduce-scatter batches amortize launch latency, and pipeline those
+collectives through while-loop double buffering. Run-specific knobs from
+the same recipe (``--xla_dump_to``, triton fusion toggles, rematerialization
+overrides) are deliberately left out — they change numerics or debuggability
+per model and do not belong in a blanket preset.
+
+Because ``XLA_FLAGS`` is read once at backend initialization, this module
+must run **before anything imports jax** — it therefore imports neither jax
+nor any repro module that does. ``benchmarks.run`` calls
+:func:`maybe_apply_gpu_xla_flags` first thing, gated on the
+``REPRO_GPU_XLA_FLAGS`` environment variable:
+
+* unset / ``0`` / ``false`` — no-op (the default: CPU/TPU runs and GPU
+  users who tune their own flags are unaffected);
+* anything else truthy (``1``) — merge the preset into ``XLA_FLAGS``,
+  with flags the user already set taking precedence.
+"""
+from __future__ import annotations
+
+import os
+from typing import Mapping, MutableMapping, Optional, Sequence
+
+__all__ = [
+    "GPU_LATENCY_HIDING_FLAGS",
+    "REPRO_GPU_XLA_FLAGS_ENV",
+    "apply_gpu_xla_flags",
+    "gpu_xla_flags",
+    "maybe_apply_gpu_xla_flags",
+]
+
+REPRO_GPU_XLA_FLAGS_ENV = "REPRO_GPU_XLA_FLAGS"
+
+# Latency-hiding / pipelining subset of the MaxText A100 recipe
+# (SNIPPETS.md snippet 3).  Ordered: scheduler, streams, combine
+# thresholds, pipelined collectives, double buffering, combine-by-dim.
+GPU_LATENCY_HIDING_FLAGS: Sequence[str] = (
+    "--xla_gpu_enable_latency_hiding_scheduler=true",
+    "--xla_gpu_enable_highest_priority_async_stream=true",
+    "--xla_gpu_all_reduce_combine_threshold_bytes=134217728",
+    "--xla_gpu_all_gather_combine_threshold_bytes=1073741824",
+    "--xla_gpu_reduce_scatter_combine_threshold_bytes=33554432",
+    "--xla_gpu_enable_pipelined_all_gather=true",
+    "--xla_gpu_enable_pipelined_reduce_scatter=true",
+    "--xla_gpu_enable_pipelined_all_reduce=true",
+    "--xla_gpu_enable_while_loop_double_buffering=true",
+    "--xla_gpu_enable_all_gather_combine_by_dim=false",
+    "--xla_gpu_enable_reduce_scatter_combine_by_dim=false",
+)
+
+
+def _flag_name(flag: str) -> str:
+    """``--xla_foo=bar`` -> ``--xla_foo`` (identity for valueless flags)."""
+    return flag.split("=", 1)[0]
+
+
+def gpu_xla_flags(existing: str = "") -> str:
+    """Merge the preset into an existing ``XLA_FLAGS`` string.
+
+    Flags already present in ``existing`` win: a user who exported
+    ``--xla_gpu_enable_latency_hiding_scheduler=false`` keeps that choice
+    and only the flags they did not mention are appended.
+    """
+    existing = existing.strip()
+    seen = {_flag_name(tok) for tok in existing.split()}
+    added = [f for f in GPU_LATENCY_HIDING_FLAGS if _flag_name(f) not in seen]
+    return " ".join(([existing] if existing else []) + added)
+
+
+def apply_gpu_xla_flags(env: Optional[MutableMapping[str, str]] = None) -> str:
+    """Unconditionally merge the preset into ``env['XLA_FLAGS']``.
+
+    Returns the resulting flag string. Must run before jax is imported to
+    have any effect.
+    """
+    if env is None:
+        env = os.environ
+    merged = gpu_xla_flags(env.get("XLA_FLAGS", ""))
+    env["XLA_FLAGS"] = merged
+    return merged
+
+
+def _truthy(val: Optional[str]) -> bool:
+    return (val or "").strip().lower() not in ("", "0", "false", "no", "off")
+
+
+def maybe_apply_gpu_xla_flags(
+        env: Optional[MutableMapping[str, str]] = None) -> Optional[str]:
+    """Apply the preset iff ``REPRO_GPU_XLA_FLAGS`` is set truthy in ``env``.
+
+    Returns the merged flag string when applied, ``None`` when the guard is
+    off. This is the entry point ``benchmarks.run`` calls before importing
+    anything jax-flavored.
+    """
+    if env is None:
+        env = os.environ
+    if not _truthy(env.get(REPRO_GPU_XLA_FLAGS_ENV)):
+        return None
+    return apply_gpu_xla_flags(env)

@@ -26,6 +26,38 @@ synchronous executes, and *stage-split* into per-stage jits (H2D +
 rebind -> kernel -> assembly -> collect) behind one interface for the
 async path.
 
+**Kernel dispatch** is decided once per plan by its resolved backend and
+honored on *every* numeric path — single execute, ``execute_batch``, the
+pipeline's stage jits, and the per-shard programs inside ``shard_map``::
+
+    backend            x  path          -> scheduled kernel
+    -------------------------------------------------------------------
+    pallas             execute/pipeline    spgemm_scheduled_impl
+                                           (scalar-prefetch Pallas grid)
+    pallas             execute_batch /     spgemm_scheduled_batch_impl
+                       batched pipeline    (batch-folded grid (bsz, t))
+    pallas             sharded (any)       same two, one Pallas program
+                                           per shard inside shard_map
+    pallas_interpret   all of the above    identical grids, interpret=True
+    jnp                all paths           ref.spgemm_scheduled_ref
+                                           (segment scatter-add reference)
+    auto                                   pallas on TPU, jnp elsewhere
+
+The batch fold iterates the triple dimension innermost, so every element
+runs its full schedule in single-grid order: batched, pipelined, and
+sharded results are **bitwise-equal** to looped single executes on every
+backend (tests/test_pallas_dispatch.py pins this, including a guard that
+pallas plans never silently fall back to the jnp reference).
+
+**Batch chunking**: ``execute_batch`` fuses many value sets into one
+device call only while a set's working bytes stay under a per-backend
+budget, and sizes chunks to a per-backend cache target
+(``executor.batch_chunk``). Both knobs resolve with precedence
+``REPRO_SPGEMM_CHUNK_BYTES`` env var > ``chunk_bytes=`` constructor
+argument > the measured per-backend ``executor._CHUNK_POLICY`` row
+(calibrated with ``benchmarks.bench_chunk_knee`` /
+:func:`repro.core.tuning.measure_chunk_knee`; re-run on new hosts).
+
 **Async serving** (``repro.spgemm.pipeline``): ``plan.pipeline(depth)``
 returns an :class:`~repro.spgemm.pipeline.SpGEMMPipeline` —
 ``submit(a_vals, b_vals)`` dispatches a step and returns a ticket
@@ -57,11 +89,12 @@ symbolic panel schedule across the devices of one mesh axis —
   scheme lifted to the mesh — and C's packed values come back row-sharded,
   assembled on host with one concatenation along the precomputed indptr
   boundaries;
-* *execution*: one ``jax.jit(shard_map(...))`` call per execute (the jnp
-  scheduled kernel on every backend, as in the batched path), with each
+* *execution*: one ``jax.jit(shard_map(...))`` call per execute, each
   shard running its own padded triple schedule against its own
-  :class:`~repro.core.schedule.AssemblyMap` slice; the async path splits
-  the same computation into per-stage ``shard_map`` programs.
+  :class:`~repro.core.schedule.AssemblyMap` slice with the backend's
+  kernel (a per-shard Pallas program on pallas backends — see the
+  dispatch matrix above — the scatter-add reference on jnp); the async
+  path splits the same computation into per-stage ``shard_map`` programs.
 
 Plans are cached in a **two-tier** cache keyed on ``(pattern hash, tile,
 group, backend, mesh key)`` — the mesh key pins the shard axis, shard

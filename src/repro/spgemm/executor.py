@@ -21,9 +21,12 @@ chaining three device-side stages under one ``jax.jit``:
 Because every stage is shape-static, the core batches over a leading value
 axis (:func:`numeric_core_batch`, the engine behind
 ``SpGEMMPlan.execute_batch``): semantically ``jax.vmap`` of the core,
-lowered by folding the batch into the triple schedule so XLA sees the same
-op shapes as the single-set path. The jitted entry points are module-level
-with static config arguments, so plans sharing shapes share executables;
+lowered by folding the batch into the triple schedule — on pallas backends
+the batch becomes the leading dimension of one scalar-prefetch Pallas grid
+(:func:`~repro.kernels.gustavson_spgemm.spgemm_scheduled_batch_impl`), on
+jnp an offset-folded schedule so XLA sees the same op shapes as the
+single-set path. The jitted entry points are module-level with static
+config arguments, so plans sharing shapes share executables;
 :class:`SpGEMMExecutor` wraps them with a plan's device-resident constants
 (schedule arrays, scatter indices, gather map — shipped to device once).
 
@@ -67,10 +70,16 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.schedule import AssemblyMap, ScheduleShard, SpGEMMSchedule
+from repro.core.schedule import (
+    AssemblyMap,
+    ScheduleShard,
+    SpGEMMSchedule,
+    stack_shard_schedules,
+)
 from repro.kernels import ref
 from repro.kernels.gustavson_spgemm import (
     pad_schedule_arrays,
+    spgemm_scheduled_batch_impl,
     spgemm_scheduled_impl,
 )
 from repro.launch.sharding import (
@@ -97,14 +106,29 @@ __all__ = [
 # Per-backend working-set budget for fusing batch elements into one device
 # call: (per_set_budget_bytes, target_cache_bytes). The per-set budget is
 # the knee where a fused chunk's accumulator working set leaves the fast
-# memory tier (measured ~1.25 MB for CPU L2/L3 — see batch_chunk); the VMEM
-# and HBM-cache numbers are first-cut estimates for the ROADMAP's "re-tune
-# for VMEM" note, overridable without a code change via the env knob.
+# memory tier; the calibration probe (repro.core.tuning.measure_chunk_knee,
+# runnable as `python -m benchmarks.bench_chunk_knee` or the "Chunk-fusion
+# knee calibration" bench section) is the measurement path for every row,
+# and the env knob overrides any row without a code change.
+#
+# * cpu — measured by the probe on the CI-class container (2026-08, jnp
+#   plans, batch 8): fused run_batch wins x1.1-2.0 per set up to
+#   ~0.58 MiB/set and regresses from ~1.1 MiB/set (x0.86, collapsing to
+#   x0.5 by 4 MiB), so the budget splits that bracket at 0.75 MiB; the
+#   chunk sweep improved monotonically through chunk=8, keeping the 8 MiB
+#   L3-class chunk cap.
+# * tpu — probe methodology applied to the VMEM hierarchy pending an
+#   on-device run: the batch-folded Pallas grid holds one (G*bm, bn) panel
+#   + A/B tiles in VMEM per step regardless of batch, so the knee tracks a
+#   set's panel-array footprint vs. usable VMEM
+#   (repro.core.tuning.TPU_V5E.vmem_bytes = 16 MiB), HBM-side chunk cap 4x.
+# * gpu — same methodology against an A100-class 40 MiB L2: budget L2/8,
+#   chunk cap the full L2.
 CHUNK_BYTES_ENV = "REPRO_SPGEMM_CHUNK_BYTES"
 _CHUNK_POLICY = {
-    "cpu": ((5 << 20) // 4, 8 << 20),
+    "cpu": ((3 << 20) // 4, 8 << 20),
     "tpu": (16 << 20, 64 << 20),
-    "gpu": (4 << 20, 32 << 20),
+    "gpu": (5 << 20, 40 << 20),
 }
 
 
@@ -208,10 +232,10 @@ def _bind_batch(vals, inv, shape):
 
 
 def _fold_schedule(sched, bsz, a_slots, b_slots, n_panels):
-    """Fold a value batch into the triple schedule: slot/panel indices of
-    all batch elements offset per element, so the batch executes as one
-    ``batch * T``-triple schedule over ``batch * n_panels`` panels while
-    preserving each element's accumulation order exactly."""
+    """Fold a value batch into the triple schedule (jnp path): slot/panel
+    indices of all batch elements offset per element, so the batch executes
+    as one ``batch * T``-triple schedule over ``batch * n_panels`` panels
+    while preserving each element's accumulation order exactly."""
     a_slot, b_slot, panel, sub_row = sched
     off = jnp.arange(bsz, dtype=jnp.int32)[:, None]
     return (
@@ -222,22 +246,51 @@ def _fold_schedule(sched, bsz, a_slots, b_slots, n_panels):
     )
 
 
+def _run_schedule_batch(
+    a_blocks, b_blocks, sched, bsz, a_slots, b_slots,
+    *, n_panels, group, backend, interpret,
+):
+    """Dispatch the batch-folded scheduled kernel over stacked blocks
+    (``[bsz * slots, ...]``). On ``pallas``/``pallas_interpret`` the fold
+    is the grid itself (:func:`spgemm_scheduled_batch_impl`, grid
+    ``(bsz, t_pad)`` over the padded schedule); on ``jnp`` it is the
+    offset-folded schedule through the scatter-add reference. Both return
+    panels ``[bsz * n_panels, group*bm, bn]`` with identical per-element
+    accumulation order."""
+    if backend in ("pallas", "pallas_interpret"):
+        a_slot, b_slot, panel, sub_row, start = sched
+        panels = spgemm_scheduled_batch_impl(
+            a_blocks, b_blocks, a_slot, b_slot, panel, sub_row, start,
+            bsz=bsz, n_panels=n_panels, group=group, interpret=interpret,
+        )
+        return panels.reshape((bsz * n_panels,) + panels.shape[2:])
+    a_slot_b, b_slot_b, panel_b, sub_row_b = _fold_schedule(
+        sched, bsz, a_slots, b_slots, n_panels
+    )
+    return ref.spgemm_scheduled_ref(
+        a_blocks, b_blocks, a_slot_b, b_slot_b, panel_b, sub_row_b,
+        bsz * n_panels, group,
+    )
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("a_shape", "b_shape", "rebind", "n_panels", "group"),
+    static_argnames=("a_shape", "b_shape", "rebind") + _STATICS,
 )
 def numeric_core_batch(
     a_vals, b_vals, a_inv, b_inv, sched, gather, *,
-    a_shape, b_shape, rebind, n_panels, group,
+    a_shape, b_shape, rebind, n_panels, group, backend, interpret,
 ):
     """Batched numeric phase over a leading value axis.
 
     Semantically ``jax.vmap`` of the functional core, lowered by *folding
-    the batch into the triple schedule* (:func:`_fold_schedule`). This
-    keeps every op shape identical to the single-set jnp path (one long
-    sorted scatter instead of a batched scatter, which XLA lowers poorly
-    on CPU) and preserves each element's accumulation order exactly —
-    batch results are bitwise equal to single jnp executes.
+    the batch into the triple schedule* (:func:`_run_schedule_batch`): on
+    pallas backends the batch becomes the leading grid dimension of one
+    scalar-prefetch Pallas call; on jnp the schedule indices are offset per
+    element into one long sorted scatter (which XLA lowers far better than
+    a batched scatter on CPU). Both preserve each element's accumulation
+    order exactly — batch results are bitwise equal to single executes on
+    the same backend.
 
     ``rebind=True`` takes [batch, nnz] value vectors (element plans);
     ``rebind=False`` takes batched packed block arrays (block plans).
@@ -249,12 +302,9 @@ def numeric_core_batch(
     else:
         a_blocks = a_vals.reshape((bsz * a_shape[0],) + tuple(a_shape[1:]))
         b_blocks = b_vals.reshape((bsz * b_shape[0],) + tuple(b_shape[1:]))
-    a_slot_b, b_slot_b, panel_b, sub_row_b = _fold_schedule(
-        sched, bsz, a_shape[0], b_shape[0], n_panels
-    )
-    panels = ref.spgemm_scheduled_ref(
-        a_blocks, b_blocks, a_slot_b, b_slot_b, panel_b, sub_row_b,
-        bsz * n_panels, group,
+    panels = _run_schedule_batch(
+        a_blocks, b_blocks, sched, bsz, a_shape[0], b_shape[0],
+        n_panels=n_panels, group=group, backend=backend, interpret=interpret,
     )
     return panels.reshape(bsz, -1)[:, gather]
 
@@ -292,20 +342,19 @@ def kernel_core(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("a_slots", "b_slots", "n_panels", "group"),
+    static_argnames=("a_slots", "b_slots") + _STATICS,
 )
 def kernel_batch_core(
-    a_blocks, b_blocks, sched, *, a_slots, b_slots, n_panels, group
+    a_blocks, b_blocks, sched, *, a_slots, b_slots, n_panels, group,
+    backend, interpret,
 ):
-    """Stage 2, batched: the folded-schedule jnp kernel over stacked
-    blocks (``[batch * slots, ...]``, as produced by stage 1)."""
+    """Stage 2, batched: the batch-folded scheduled kernel over stacked
+    blocks (``[batch * slots, ...]``, as produced by stage 1) — the
+    plan-backend dispatch of :func:`_run_schedule_batch`."""
     bsz = a_blocks.shape[0] // a_slots
-    a_slot_b, b_slot_b, panel_b, sub_row_b = _fold_schedule(
-        sched, bsz, a_slots, b_slots, n_panels
-    )
-    return ref.spgemm_scheduled_ref(
-        a_blocks, b_blocks, a_slot_b, b_slot_b, panel_b, sub_row_b,
-        bsz * n_panels, group,
+    return _run_schedule_batch(
+        a_blocks, b_blocks, sched, bsz, a_slots, b_slots,
+        n_panels=n_panels, group=group, backend=backend, interpret=interpret,
     )
 
 
@@ -330,10 +379,12 @@ class SpGEMMExecutor:
     module-level jitted cores (shared executables across same-shaped plans)
     with zero per-call host work beyond operand transfer.
 
-    ``run_batch`` always executes on the jnp (pure-XLA) kernel path: the
-    Pallas scalar-prefetch grid has no batching rule, and XLA batches the
-    einsum/scatter pipeline natively. Single-shot ``run``/``run_values``
-    honor the plan's backend.
+    Every entry point honors the plan's backend: single-shot calls run the
+    scalar-prefetch Pallas grid on pallas plans, and ``run_batch`` runs its
+    batch-folded variant (:func:`~repro.kernels.gustavson_spgemm.
+    spgemm_scheduled_batch_impl` — the batch is a leading grid dimension,
+    so pallas plans never leave the MXU path when batched). The jnp
+    (pure-XLA) kernel serves ``backend="jnp"`` plans on every path.
     """
 
     def __init__(
@@ -365,8 +416,9 @@ class SpGEMMExecutor:
             schedule.n_panels * schedule.group + schedule.num_triples
         ) * bm
         self._gather = jnp.asarray(assembly.gather)
-        # The jnp schedule tuple is kept for every backend: it is the batch
-        # path's kernel even on pallas plans.
+        # The raw (unpadded) schedule tuple serves jnp plans on every path;
+        # pallas plans get the padded 5-tuple below, shared by the single
+        # and batch-folded grids.
         self._sched_jnp = tuple(
             jnp.asarray(x) for x in (
                 schedule.a_slot, schedule.b_slot, schedule.panel,
@@ -407,16 +459,19 @@ class SpGEMMExecutor:
         Fusing pays only when one set's working bytes (panel accumulator +
         einsum intermediates, ``4 * per_set_rows * bn``) are small: chunks
         sized to keep ``chunk * per_set`` under ``cache_bytes`` then cut
-        per-set cost 1.3-1.7x by amortizing dispatch (measured, CPU). Above
-        ``small_set_bytes`` per set, measured mid-size chunks *regress*
-        (the fused scatter's accumulator leaves cache, 2-3x per-set), so
-        larger problems run one set per call — matching a single
-        ``execute()`` minus its host rebind/staging work.
+        per-set cost 1.1-2x by amortizing dispatch (probe-measured, CPU).
+        Above ``small_set_bytes`` per set, measured chunks *regress* (the
+        fused accumulator leaves cache: x0.86 at 1.1 MiB/set falling to
+        x0.5 by 4 MiB on the calibration container), so larger problems
+        run one set per call — matching a single ``execute()`` minus its
+        host rebind/staging work.
 
         Both knobs default to the resolved per-backend policy (constructor
         ``chunk_bytes`` arg, overridden by ``REPRO_SPGEMM_CHUNK_BYTES``):
         the CPU knee is an L2/L3 property and wrong for VMEM, so TPU/GPU
-        backends get their own table rows.
+        backends get their own table rows. All rows are re-measured with
+        :func:`repro.core.tuning.measure_chunk_knee` (see the
+        ``_CHUNK_POLICY`` provenance note).
         """
         if small_set_bytes is None:
             small_set_bytes = self._chunk_policy[0]
@@ -446,13 +501,15 @@ class SpGEMMExecutor:
         )
 
     def run_batch(self, a_vals, b_vals, *, rebind: bool) -> jax.Array:
-        """Batched values -> packed C values [batch, nnz_c] (jnp path)."""
+        """Batched values -> packed C values [batch, nnz_c] (plan's
+        backend: the batch-folded Pallas grid on pallas plans)."""
         return numeric_core_batch(
             jnp.asarray(a_vals), jnp.asarray(b_vals),
             self._a_inv, self._b_inv,
-            self._sched_jnp, self._gather,
+            self._sched, self._gather,
             a_shape=self.a_shape, b_shape=self.b_shape, rebind=rebind,
-            n_panels=self.n_panels, group=self.group,
+            n_panels=self.n_panels, group=self.group, backend=self.backend,
+            interpret=self._interpret,
         )
 
     # -- pipeline protocol (stage-split, non-blocking until collect) -------
@@ -461,9 +518,9 @@ class SpGEMMExecutor:
     # "batch_values" ([batch, nnz]), "batch_blocks" ([batch, slots, ...]
     # packed blocks). Single-shot block operands are staged by the plan's
     # ``_stage_a``/``_stage_b`` hooks and enter at pipe_kernel directly.
-    # ``mode`` for kernel/assemble/collect: "single" or "batch". Single
-    # dispatches honor the plan's backend (like ``run``); batch dispatches
-    # take the jnp path (like ``run_batch``).
+    # ``mode`` for kernel/assemble/collect: "single" or "batch". Both
+    # dispatch on the plan's backend (like ``run``/``run_batch``): pallas
+    # plans run the scalar-prefetch grid, batch-folded in batch mode.
 
     def pipe_stage(self, a, b, *, mode: str):
         """H2D transfer + value-rebind dispatch; returns staged device
@@ -499,9 +556,10 @@ class SpGEMMExecutor:
                 backend=self.backend, interpret=self._interpret,
             )
         return kernel_batch_core(
-            a_blocks, b_blocks, self._sched_jnp,
+            a_blocks, b_blocks, self._sched,
             a_slots=self.a_shape[0], b_slots=self.b_shape[0],
             n_panels=self.n_panels, group=self.group,
+            backend=self.backend, interpret=self._interpret,
         )
 
     def pipe_assemble(self, panels, *, mode: str):
@@ -540,11 +598,15 @@ class ShardedSpGEMMExecutor:
     * C — **row-sharded**: the final CSR data is one host concatenation of
       the per-shard segments along the precomputed indptr boundaries.
 
-    The kernel inside ``shard_map`` is the jnp (pure-XLA) scheduled path
-    for every backend, like ``run_batch`` on the unsharded executor (the
-    Pallas scalar-prefetch grid has no shard_map rule); padding triples
-    write to a dummy panel and padded gather slots are trimmed on host, so
-    ragged and empty shards are handled by construction.
+    The kernel inside ``shard_map`` honors the plan's backend: every
+    shard's rebased schedule is a contiguous standalone program, so on
+    pallas plans each device runs its own scalar-prefetch Pallas grid over
+    its padded schedule slice (batch-folded in the batched kinds) —
+    ``shard_map`` is told ``check_vma=False`` for those programs since
+    ``pallas_call`` carries no replication rule. The jnp (pure-XLA) path
+    serves ``backend="jnp"``. On either backend, padding triples write to
+    a dummy panel and padded gather slots are trimmed on host, so ragged
+    and empty shards are handled by construction.
     """
 
     def __init__(
@@ -572,6 +634,9 @@ class ShardedSpGEMMExecutor:
         self.axis = axis
         self.a_shape = tuple(a_shape)
         self.b_shape = tuple(b_shape)
+        self._interpret = (
+            backend == "pallas_interpret" or jax.default_backend() != "tpu"
+        )
         self._chunk_policy = resolve_chunk_bytes(chunk_bytes)
         self._shards = list(shards)
         s0 = shards[0].schedule
@@ -596,21 +661,13 @@ class ShardedSpGEMMExecutor:
         def put(arr, sharding):
             return jax.device_put(np.ascontiguousarray(arr), sharding)
 
-        # Stacked, padded schedule [n_shards, t_max]: pads execute a real
-        # (block 0) x (block 0) matmul into the dummy panel p_max, which no
-        # gather reads.
-        a_slot = np.zeros((self._s, self._t_max), np.int32)
-        b_slot = np.zeros((self._s, self._t_max), np.int32)
-        panel = np.full((self._s, self._t_max), self._p_max, np.int32)
-        sub_row = np.zeros((self._s, self._t_max), np.int32)
-        for i, sh in enumerate(shards):
-            t = sh.num_triples
-            a_slot[i, :t] = sh.schedule.a_slot
-            b_slot[i, :t] = sh.schedule.b_slot
-            panel[i, :t] = sh.schedule.panel
-            sub_row[i, :t] = sh.schedule.sub_row
+        # Stacked, padded schedule [n_shards, t_max] incl. per-shard start
+        # flags (stack_shard_schedules): pads execute a real (block 0) x
+        # (block 0) matmul into the dummy panel p_max, which no gather
+        # reads; start=1 on pads keeps the pallas accumulator clean.
         self._sched = tuple(
-            put(x, self._sep) for x in (a_slot, b_slot, panel, sub_row)
+            put(x, self._sep)
+            for x in stack_shard_schedules(shards, self._t_max, self._p_max)
         )
         gdtype = np.result_type(*(asm.gather.dtype for asm in assemblies))
         gather = np.zeros((self._s, self._c_max), gdtype)
@@ -713,60 +770,97 @@ class ShardedSpGEMMExecutor:
         a_max, p_max = self._a_max, self._p_max
         bm, bk = self.a_shape[1], self.a_shape[2]
         b_shape = self.b_shape
+        backend, interpret = self.backend, self._interpret
+        # Every shard-local schedule is padded to (t_max, p_max), so on
+        # pallas backends each device runs its own scalar-prefetch grid
+        # over p_max + 1 panels — the same panel count the jnp reference
+        # produces, keeping stage outputs shape-identical across backends.
+        # The shard's own dummy triples target panel p_max (never gathered);
+        # the impl-level dummy p_max + 1 is stripped inside the call.
 
-        def kernel(a_blocks, b_blocks, a_slot, b_slot, panel, sub_row, gth):
-            panels = ref.spgemm_scheduled_ref(
+        def sched_kernel(a_blocks, b_blocks, a_slot, b_slot, panel, sub_row,
+                         strt):
+            if backend in ("pallas", "pallas_interpret"):
+                return spgemm_scheduled_impl(
+                    a_blocks, b_blocks, a_slot, b_slot, panel, sub_row, strt,
+                    n_panels=p_max + 1, group=group, interpret=interpret,
+                )
+            return ref.spgemm_scheduled_ref(
                 a_blocks, b_blocks, a_slot, b_slot, panel, sub_row,
                 p_max + 1, group,
+            )
+
+        def sched_kernel_batch(a_blocks, b_blocks, a_slot, b_slot, panel,
+                               sub_row, strt, bsz):
+            return _run_schedule_batch(
+                a_blocks, b_blocks,
+                (a_slot, b_slot, panel, sub_row, strt)
+                if backend in ("pallas", "pallas_interpret")
+                else (a_slot, b_slot, panel, sub_row),
+                bsz, a_max, b_shape[0],
+                n_panels=p_max + 1, group=group, backend=backend,
+                interpret=interpret,
+            )
+
+        def kernel(a_blocks, b_blocks, a_slot, b_slot, panel, sub_row, strt,
+                   gth):
+            panels = sched_kernel(
+                a_blocks, b_blocks, a_slot, b_slot, panel, sub_row, strt
             )
             return panels.reshape(-1)[gth]
 
         def kernel_batch(a_blocks, b_blocks, a_slot, b_slot, panel, sub_row,
-                         gth, bsz):
-            a_slot_b, b_slot_b, panel_b, sub_row_b = _fold_schedule(
-                (a_slot, b_slot, panel, sub_row), bsz, a_max, b_shape[0],
-                p_max + 1,
-            )
-            panels = ref.spgemm_scheduled_ref(
-                a_blocks, b_blocks, a_slot_b, b_slot_b, panel_b, sub_row_b,
-                bsz * (p_max + 1), group,
+                         strt, gth, bsz):
+            panels = sched_kernel_batch(
+                a_blocks, b_blocks, a_slot, b_slot, panel, sub_row, strt, bsz
             )
             return panels.reshape(bsz, -1)[:, gth]
 
         out = P(ax)
+        # pallas_call has no shard_map replication rule, so the programs
+        # that contain the kernel disable the replication check on pallas
+        # backends; bind/assemble programs keep the jax default.
+        vma: Optional[bool] = None
         if kind == "run":
-            def body(a_bl, b_bl, a_slot, b_slot, panel, sub_row, gth):
+            def body(a_bl, b_bl, a_slot, b_slot, panel, sub_row, strt, gth):
                 return kernel(a_bl[0], b_bl, a_slot[0], b_slot[0], panel[0],
-                              sub_row[0], gth[0])[None]
-            specs = (P(ax), P(), P(ax), P(ax), P(ax), P(ax), P(ax))
+                              sub_row[0], strt[0], gth[0])[None]
+            specs = (P(ax), P(), P(ax), P(ax), P(ax), P(ax), P(ax), P(ax))
+            vma = False
         elif kind == "run_values":
             def body(a_vals, b_vals, a_inv, b_inv, a_slot, b_slot, panel,
-                     sub_row, gth):
+                     sub_row, strt, gth):
                 a_bl = _bind(a_vals[0], a_inv[0], (a_max, bm, bk))
                 b_bl = _bind(b_vals, b_inv, b_shape)
                 return kernel(a_bl, b_bl, a_slot[0], b_slot[0], panel[0],
-                              sub_row[0], gth[0])[None]
+                              sub_row[0], strt[0], gth[0])[None]
             specs = (P(ax), P(), P(ax), P(), P(ax), P(ax), P(ax), P(ax),
-                     P(ax))
+                     P(ax), P(ax))
+            vma = False
         elif kind == "batch_values":
             def body(a_vals, b_vals, a_inv, b_inv, a_slot, b_slot, panel,
-                     sub_row, gth):
+                     sub_row, strt, gth):
                 bsz = a_vals.shape[1]
                 a_bl = _bind_batch(a_vals[0], a_inv[0], (a_max, bm, bk))
                 b_bl = _bind_batch(b_vals, b_inv, b_shape)
                 return kernel_batch(a_bl, b_bl, a_slot[0], b_slot[0],
-                                    panel[0], sub_row[0], gth[0], bsz)[None]
+                                    panel[0], sub_row[0], strt[0], gth[0],
+                                    bsz)[None]
             specs = (P(ax), P(), P(ax), P(), P(ax), P(ax), P(ax), P(ax),
-                     P(ax))
+                     P(ax), P(ax))
+            vma = False
         elif kind == "batch_blocks":
-            def body(a_vals, b_vals, a_slot, b_slot, panel, sub_row, gth):
+            def body(a_vals, b_vals, a_slot, b_slot, panel, sub_row, strt,
+                     gth):
                 bsz = a_vals.shape[1]
                 a_bl = a_vals[0].reshape((bsz * a_max, bm, bk))
                 b_bl = b_vals.reshape(
                     (bsz * b_shape[0],) + tuple(b_shape[1:]))
                 return kernel_batch(a_bl, b_bl, a_slot[0], b_slot[0],
-                                    panel[0], sub_row[0], gth[0], bsz)[None]
-            specs = (P(ax), P(), P(ax), P(ax), P(ax), P(ax), P(ax))
+                                    panel[0], sub_row[0], strt[0], gth[0],
+                                    bsz)[None]
+            specs = (P(ax), P(), P(ax), P(ax), P(ax), P(ax), P(ax), P(ax))
+            vma = False
         # -- stage-split kinds (the pipeline protocol): same ops as the
         # fused bodies above, one shard_map program per stage so staging
         # step s+1 dispatches independently of step s's kernel.
@@ -789,26 +883,24 @@ class ShardedSpGEMMExecutor:
             specs = (P(ax), P(), P(ax), P())
             out = (P(ax), P())
         elif kind == "kernel":
-            def body(a_bl, b_bl, a_slot, b_slot, panel, sub_row):
-                return ref.spgemm_scheduled_ref(
+            def body(a_bl, b_bl, a_slot, b_slot, panel, sub_row, strt):
+                return sched_kernel(
                     a_bl[0], b_bl, a_slot[0], b_slot[0], panel[0],
-                    sub_row[0], p_max + 1, group,
+                    sub_row[0], strt[0],
                 )[None]
-            specs = (P(ax), P(), P(ax), P(ax), P(ax), P(ax))
+            specs = (P(ax), P(), P(ax), P(ax), P(ax), P(ax), P(ax))
+            vma = False
         elif kind == "kernel_batch":
-            def body(a_bl, b_bl, a_slot, b_slot, panel, sub_row):
+            def body(a_bl, b_bl, a_slot, b_slot, panel, sub_row, strt):
                 bsz = a_bl.shape[1]
-                a_slot_b, b_slot_b, panel_b, sub_row_b = _fold_schedule(
-                    (a_slot[0], b_slot[0], panel[0], sub_row[0]), bsz,
-                    a_max, b_shape[0], p_max + 1,
-                )
-                return ref.spgemm_scheduled_ref(
+                return sched_kernel_batch(
                     a_bl[0].reshape((bsz * a_max, bm, bk)),
                     b_bl.reshape((bsz * b_shape[0],) + tuple(b_shape[1:])),
-                    a_slot_b, b_slot_b, panel_b, sub_row_b,
-                    bsz * (p_max + 1), group,
+                    a_slot[0], b_slot[0], panel[0], sub_row[0], strt[0],
+                    bsz,
                 )[None]
-            specs = (P(ax), P(), P(ax), P(ax), P(ax), P(ax))
+            specs = (P(ax), P(), P(ax), P(ax), P(ax), P(ax), P(ax))
+            vma = False
         elif kind == "assemble":
             def body(panels, gth):
                 return panels[0].reshape(-1)[gth[0]][None]
@@ -821,8 +913,11 @@ class ShardedSpGEMMExecutor:
         else:  # pragma: no cover - internal
             raise ValueError(kind)
 
+        if backend not in ("pallas", "pallas_interpret"):
+            vma = None
         fn = jax.jit(shard_map(
             body, mesh=self.mesh, in_specs=specs, out_specs=out,
+            check_vma=vma,
         ))
         self._fns[kind] = fn
         return fn

@@ -659,7 +659,9 @@ class SpGEMMPlan:
         Stateless with respect to the plan's staged values: it never touches
         the buffers no-arg ``execute()`` reuses, so it is safe to interleave
         with single executes and works after ``release_values()``. The
-        batch runs on the jnp (pure-XLA) kernel path for every backend.
+        batch honors the plan's backend: pallas plans run the batch-folded
+        Pallas grid, jnp plans the offset-folded scatter-add reference —
+        both bitwise-equal to looping ``execute`` per element.
         """
         a_vals = np.asarray(a_vals)
         b_vals = np.asarray(b_vals)

@@ -1,0 +1,57 @@
+"""Opt-in GPU XLA_FLAGS preset (repro.launch.xla_flags).
+
+Pure env-dict plumbing — no jax import in the module under test (it must
+run before jax initializes to have any effect, see benchmarks/run.py).
+"""
+from repro.launch import xla_flags as xf
+
+
+class TestMerge:
+    def test_empty_existing_gets_full_preset(self):
+        out = xf.gpu_xla_flags("")
+        assert out.split() == list(xf.GPU_LATENCY_HIDING_FLAGS)
+
+    def test_user_set_flags_win(self):
+        existing = "--xla_gpu_enable_latency_hiding_scheduler=false"
+        toks = xf.gpu_xla_flags(existing).split()
+        assert toks[0] == existing
+        assert "--xla_gpu_enable_latency_hiding_scheduler=true" not in toks
+        names = [t.split("=", 1)[0] for t in toks]
+        assert len(names) == len(set(names))
+
+    def test_unrelated_flags_preserved(self):
+        toks = xf.gpu_xla_flags("--xla_foo=1 --xla_bar").split()
+        assert "--xla_foo=1" in toks and "--xla_bar" in toks
+        for f in xf.GPU_LATENCY_HIDING_FLAGS:
+            assert f in toks
+
+    def test_idempotent(self):
+        once = xf.gpu_xla_flags("")
+        assert xf.gpu_xla_flags(once) == once
+
+
+class TestGuard:
+    def test_default_off(self):
+        env = {}
+        assert xf.maybe_apply_gpu_xla_flags(env) is None
+        assert env == {}
+
+    def test_falsy_values_off(self):
+        for v in ("0", "false", "no", "off", "", " "):
+            env = {xf.REPRO_GPU_XLA_FLAGS_ENV: v}
+            assert xf.maybe_apply_gpu_xla_flags(env) is None
+            assert "XLA_FLAGS" not in env
+
+    def test_enabled_merges_into_env(self):
+        env = {xf.REPRO_GPU_XLA_FLAGS_ENV: "1", "XLA_FLAGS": "--xla_foo=1"}
+        out = xf.maybe_apply_gpu_xla_flags(env)
+        assert out == env["XLA_FLAGS"]
+        assert env["XLA_FLAGS"].startswith("--xla_foo=1 ")
+        for f in xf.GPU_LATENCY_HIDING_FLAGS:
+            assert f in env["XLA_FLAGS"].split()
+
+    def test_apply_unconditional(self):
+        env = {}
+        out = xf.apply_gpu_xla_flags(env)
+        assert env["XLA_FLAGS"] == out == " ".join(
+            xf.GPU_LATENCY_HIDING_FLAGS)
