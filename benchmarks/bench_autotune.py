@@ -1,0 +1,103 @@
+"""Per-pattern autotuner: tuned-vs-default throughput on paper matrices.
+
+Runs :func:`repro.spgemm.autotune.autotune_plan` on (scaled) Table 4
+matrices and reports measured ``values_per_s`` for the winning config
+against the requested default — the autotuner's value proposition in one
+table — plus the model-vs-measured ranking agreement (how much of the
+candidate grid the roofline pruning can safely discard on this host).
+
+Because the default config is force-included in the measured survivors,
+the tuned config can never be meaningfully *slower* than the default; CI
+gates on ``ok`` = every row's speedup >= 0.95 (slack for probe jitter on
+shared runners).
+
+``PYTHONPATH=src python -m benchmarks.bench_autotune [--scale S]``
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.sparse.formats import COO
+from repro.sparse.random import suite_matrix
+from repro.spgemm import PlanCache
+from repro.spgemm.autotune import autotune_plan, probe_run_count
+
+# Smallest two Table 4 matrices at a CI-friendly scale; A @ A^T like the
+# paper's benchmark harness.
+MATRICES = [("poisson3Da", 0.02), ("2cubes_sphere", 0.004)]
+
+# Tuned throughput must not regress past probe jitter on a shared host.
+MIN_SPEEDUP = 0.95
+
+
+def _pattern(name: str, scale: float):
+    a = suite_matrix(name, scale=scale).to_coo().sum_duplicates()
+    rng = np.random.default_rng(11)
+    v = rng.integers(-4, 5, a.nnz).astype(np.float32)
+    a.val = np.where(v == 0, np.float32(1.0), v)
+    b = COO(a.col, a.row, a.val, (a.shape[1], a.shape[0]))
+    return a, b
+
+
+def run(scale: float = 1.0, tile: int = 16, group: int = 2,
+        backend: str = "jnp", repeats: int = 3, quiet: bool = False):
+    rows = []
+    for name, base_scale in MATRICES:
+        a, b = _pattern(name, base_scale * scale)
+        before = probe_run_count()
+        plan = autotune_plan(
+            a, b, tile=tile, group=group, backend=backend,
+            cache=PlanCache(), model_top_k=2, probe_batch=4,
+            repeats=repeats, depth_candidates=(1, 2, 4),
+        )
+        cfg = plan.tuned_config
+        rows.append({
+            "matrix": name,
+            "shape": list(a.shape),
+            "nnz": int(a.nnz),
+            "default_tile": tile,
+            "default_group": group,
+            "tuned_tile": list(cfg.tile),
+            "tuned_group": cfg.group,
+            "tuned_chunk_bytes": cfg.chunk_bytes,
+            "tuned_depth": cfg.pipeline_depth,
+            "default_values_per_s": cfg.default_values_per_s,
+            "tuned_values_per_s": cfg.values_per_s,
+            "speedup": cfg.speedup,
+            "model_rank": cfg.model_rank,
+            "ranking_agreement": cfg.ranking_agreement,
+            "probes": probe_run_count() - before,
+        })
+    ok = all(r["speedup"] >= MIN_SPEEDUP for r in rows)
+    if not quiet:
+        print("matrix,nnz,tuned_tile,tuned_group,chunk_bytes,depth,"
+              "default_vps,tuned_vps,speedup,model_rank,agreement,probes")
+        for r in rows:
+            print(f"{r['matrix']},{r['nnz']},"
+                  f"{'x'.join(str(t) for t in r['tuned_tile'])},"
+                  f"{r['tuned_group']},{r['tuned_chunk_bytes']},"
+                  f"{r['tuned_depth']},{r['default_values_per_s']:.1f},"
+                  f"{r['tuned_values_per_s']:.1f},{r['speedup']:.2f},"
+                  f"{r['model_rank']},{r['ranking_agreement']:.2f},"
+                  f"{r['probes']}")
+        print(f"ok={ok} (gate: every speedup >= {MIN_SPEEDUP})")
+    return {"rows": rows, "ok": ok, "min_speedup_gate": MIN_SPEEDUP}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="extra scale factor on the per-matrix defaults")
+    ap.add_argument("--tile", type=int, default=16)
+    ap.add_argument("--group", type=int, default=2)
+    ap.add_argument("--backend", default="jnp")
+    ap.add_argument("--repeats", type=int, default=3)
+    args = ap.parse_args(argv)
+    return run(scale=args.scale, tile=args.tile, group=args.group,
+               backend=args.backend, repeats=args.repeats)
+
+
+if __name__ == "__main__":
+    main()

@@ -25,6 +25,7 @@ maybe_apply_gpu_xla_flags()
 
 from benchmarks import (
     bench_arch_params,
+    bench_autotune,
     bench_chunk_knee,
     bench_energy,
     bench_gateway,
@@ -53,6 +54,9 @@ SECTIONS = [
     # source; see repro.core.tuning.measure_chunk_knee).
     ("Chunk-fusion knee calibration",
      lambda: bench_chunk_knee.main(["--repeats", "2"])),
+    # Tuned-vs-default values/s on paper matrices (+ model agreement);
+    # the record's "ok" flag is the CI gate: tuned >= 0.95x default.
+    ("Autotune", lambda: bench_autotune.main(["--repeats", "2"])),
     ("Gateway serving — throughput/latency", bench_gateway.main),
     ("Roofline (from dry-run artifacts)", roofline.main),
 ]

@@ -31,6 +31,8 @@ __all__ = [
     "stuf",
     "runtime_from_stuf",
     "energy",
+    "spgemm_schedule_traffic",
+    "roofline_seconds",
     "PAPER_TABLE7_MS",
     "PAPER_TABLE8_STUF",
     "PAPER_TABLE9_J",
@@ -44,22 +46,34 @@ class DeviceModel:
     clock_Hz: float  # F
     parallelism: float  # P: FLOPs per cycle available
     avg_power_W: float  # average power during SpGEMM (paper-implied)
+    mem_bandwidth: float = 0.0  # bytes/s (0 = unknown; roofline helpers
+    # then treat the device as compute-bound only)
 
     @property
     def peak_flops(self) -> float:
         return self.clock_Hz * self.parallelism
 
 
-# Paper Sec. 5.3.2: CPU = 2 sockets x 4 cores x 32 FLOPs/cycle @ 3.5 GHz.
-CPU_XEON_E5_2637 = DeviceModel("xeon-e5-2637v3", 3.5e9, 256.0, 128.0)
+# Paper Sec. 5.3.2: CPU = 2 sockets x 4 cores x 32 FLOPs/cycle @ 3.5 GHz;
+# E5-2637 v3 is 4-channel DDR4-2133 per socket: ~68 GB/s.
+CPU_XEON_E5_2637 = DeviceModel(
+    "xeon-e5-2637v3", 3.5e9, 256.0, 128.0, mem_bandwidth=68e9
+)
 # GPU: 3072 CUDA cores (Table 5; Sec. 5.3.2's 3,584 is a typo), 2 FLOPs/cycle
-# @ 1.0 GHz.
-GPU_TITAN_X = DeviceModel("gtx-titan-x", 1.0e9, 6144.0, 160.0)
+# @ 1.0 GHz; 336 GB/s GDDR5.
+GPU_TITAN_X = DeviceModel(
+    "gtx-titan-x", 1.0e9, 6144.0, 160.0, mem_bandwidth=336e9
+)
 # FPGA: SW*NUM_PE = 512 DSPs busy, 2 FLOPs/cycle each @ 236 MHz; the paper's
 # STUF normalizes by all 1,518 DSPs. avg power implied by Table 7/9: ~18.5 W.
-FPGA_ARRIA10 = DeviceModel("arria10-gx", 236e6, 2 * 1518.0, 18.5)
+# Bandwidth is the paper's C1 = 15 GB/s DDR.
+FPGA_ARRIA10 = DeviceModel(
+    "arria10-gx", 236e6, 2 * 1518.0, 18.5, mem_bandwidth=15e9
+)
 # TPU v5e-class single chip (roofline constants from the brief).
-TPU_V5E_CHIP = DeviceModel("tpu-v5e", 940e6, 197e12 / 940e6, 170.0)
+TPU_V5E_CHIP = DeviceModel(
+    "tpu-v5e", 940e6, 197e12 / 940e6, 170.0, mem_bandwidth=819e9
+)
 
 
 def stuf(n_ops: float, device: DeviceModel, runtime_s: float) -> float:
@@ -77,6 +91,51 @@ def runtime_from_stuf(n_ops: float, device: DeviceModel, u: float) -> float:
 def energy(runtime_s: float, device: DeviceModel) -> float:
     """E = R · avg power (paper Sec. 5.3.3)."""
     return runtime_s * device.avg_power_W
+
+
+def spgemm_schedule_traffic(
+    *,
+    num_triples: int,
+    nnzb_a: int,
+    b_fetches: int,
+    n_panels: int,
+    tile,
+    group: int,
+    dtype_bytes: int = 4,
+) -> Dict[str, float]:
+    """FLOP and streamed-byte counts of one scheduled block-Gustavson
+    numeric phase, from the plan report's symbolic counters.
+
+    Per triple the kernel runs a dense (bm x bk) @ (bk x bn) MAC —
+    ``2·bm·bk·bn`` FLOPs. Traffic is the packed A blocks streamed once
+    (``nnzb_a·bm·bk``), every scheduled B-tile fetch (``b_fetches·bk·bn``
+    — the OMAR-reduced count, the paper's Sec. 4.2.2 win), and the C
+    accumulator panels written out (``n_panels·group·bm·bn``).
+    """
+    bm, bk, bn = (int(t) for t in tile)
+    flops = 2.0 * float(num_triples) * bm * bk * bn
+    bytes_streamed = float(dtype_bytes) * (
+        float(nnzb_a) * bm * bk
+        + float(b_fetches) * bk * bn
+        + float(n_panels) * group * bm * bn
+    )
+    return {"flops": flops, "bytes": bytes_streamed}
+
+
+def roofline_seconds(
+    flops: float, bytes_streamed: float, device: DeviceModel
+) -> float:
+    """Roofline runtime estimate: max of the compute and memory floors.
+
+    This is the model side of the autotuner's two-stage search
+    (``repro.spgemm.autotune``): absolute seconds are host-dependent, but
+    the *ordering* over candidate (tile, group) configs is what prunes
+    the grid before measured probes. Devices with unknown bandwidth
+    (``mem_bandwidth == 0``) rank by compute alone."""
+    t = flops / device.peak_flops
+    if device.mem_bandwidth > 0:
+        t = max(t, bytes_streamed / device.mem_bandwidth)
+    return t
 
 
 PAPER_MATRICES = [

@@ -32,8 +32,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 __all__ = [
     "FPGASpec",
     "ARRIA10_GX",
+    "best_ms",
     "derive_fpga_params",
     "fpga_runtime_model",
+    "interleaved_best_ms",
     "TPUSpec",
     "TPU_V5E",
     "measure_chunk_knee",
@@ -205,15 +207,48 @@ def _random_int_coo(m: int, n: int, density: float, seed: int):
     ).sum_duplicates()
 
 
-def _best_ms(fn, repeats: int) -> float:
+def best_ms(fn, repeats: int, timer=None) -> float:
+    """Min-of-N wall time of ``fn`` in milliseconds.
+
+    The shared probe primitive behind :func:`measure_chunk_knee` and the
+    plan autotuner (``repro.spgemm.autotune``). ``timer`` is a
+    ``time.perf_counter``-like callable, injectable so tuner tests run
+    against a deterministic fake clock; it is called exactly twice per
+    repeat (start, stop). The result is forced to host
+    (``np.asarray``) inside the timed region so JAX's async dispatch
+    cannot hide device time."""
     import numpy as np
 
+    timer = timer if timer is not None else time.perf_counter
     best = float("inf")
     for _ in range(repeats):
-        t0 = time.perf_counter()
+        t0 = timer()
         np.asarray(fn())
-        best = min(best, (time.perf_counter() - t0) * 1e3)
+        best = min(best, (timer() - t0) * 1e3)
     return best
+
+
+def interleaved_best_ms(fns: Sequence, repeats: int, timer=None) -> List[float]:
+    """Min-of-N over several probe thunks with **interleaved** repeats:
+    round r times every ``fn`` once before round r+1 starts, so slow
+    drift (thermal, background load) lands evenly on all candidates
+    instead of biasing whichever ran last. Returns one best-ms per fn,
+    in order. Timer calls: exactly two per (repeat, fn) measurement."""
+    import numpy as np
+
+    timer = timer if timer is not None else time.perf_counter
+    best = [float("inf")] * len(fns)
+    for _ in range(repeats):
+        for i, fn in enumerate(fns):
+            t0 = timer()
+            np.asarray(fn())
+            best[i] = min(best[i], (timer() - t0) * 1e3)
+    return best
+
+
+# Back-compat private alias (pre-autotune callers).
+def _best_ms(fn, repeats: int) -> float:
+    return best_ms(fn, repeats)
 
 
 def measure_chunk_knee(

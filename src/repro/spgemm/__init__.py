@@ -54,9 +54,55 @@ device call only while a set's working bytes stay under a per-backend
 budget, and sizes chunks to a per-backend cache target
 (``executor.batch_chunk``). Both knobs resolve with precedence
 ``REPRO_SPGEMM_CHUNK_BYTES`` env var > ``chunk_bytes=`` constructor
-argument > the measured per-backend ``executor._CHUNK_POLICY`` row
-(calibrated with ``benchmarks.bench_chunk_knee`` /
+argument (the tier a plan's applied ``TunedConfig`` feeds) > the
+measured per-backend ``executor._CHUNK_POLICY`` row (calibrated with
+``benchmarks.bench_chunk_knee`` /
 :func:`repro.core.tuning.measure_chunk_knee`; re-run on new hosts).
+
+**Autotuning** (``repro.spgemm.autotune``): per-pattern config search
+over ``(tile, group)`` x ``chunk_bytes`` x pipeline depth, run once and
+amortized like the symbolic phase itself. Stage 1 ranks the candidate
+grid with the roofline model over each schedule's exact FLOP/traffic
+counts (:func:`repro.core.perfmodel.spgemm_schedule_traffic` +
+:func:`repro.core.perfmodel.roofline_seconds`) and keeps the top K plus
+the requested default; stage 2 measures the survivors with short
+interleaved min-of-N ``execute_batch`` probes on synthetic values (the
+``measure_chunk_knee`` machinery), then probes pipeline depth on the
+winner only. The result — a
+:class:`~repro.spgemm.autotune.TunedConfig` with measured values/s for
+winner and default, the model's rank of the winner, and the
+model-vs-measured ranking agreement — is applied to the plan and
+persisted beside the plan artifacts (a versioned ``PlanStore`` sidecar
+record *and* inside ``persist_artifacts`` meta), so a warm-restarted
+process rehydrates schedule **and** tuned config with **zero** probe
+executions (``repro.spgemm.autotune.probe_run_count`` stays flat).
+Numerics never change: chunk/depth are bitwise-invariant, and a tuned
+(tile, group) plan is bitwise-equal to an untuned plan built directly
+at that tile/group. Cookbook::
+
+    from repro.spgemm import spgemm_plan
+    from repro.spgemm.autotune import probe_run_count
+
+    plan = spgemm_plan(a, b, tile=64, group=4, autotune=True)
+    cfg = plan.tuned_config           # TunedConfig(tile, group,
+                                      #   chunk_bytes, pipeline_depth, ...)
+    cfg.speedup                       # measured winner/default ratio
+    plan.report.config_source         # "tuned" | "persisted" |
+                                      # "env-override" | "default"
+    # warm restart, same REPRO_SPGEMM_PLAN_DIR: zero probes
+    plan = spgemm_plan(a, b, tile=64, group=4, autotune=True)
+    assert plan.report.config_source == "persisted"
+    assert probe_run_count() == 0
+
+The full exec-config precedence chain, highest first:
+
+1. ``REPRO_SPGEMM_CHUNK_BYTES`` env var — the operator override, always
+   wins (``report.config_source == "env-override"``);
+2. explicit ``chunk_bytes=`` executor constructor argument / an applied
+   ``TunedConfig`` (``plan.apply_tuned_config``, what ``autotune=True``
+   and persisted-artifact rehydration do);
+3. the measured per-backend ``executor._CHUNK_POLICY`` table row
+   (``report.config_source == "default"``).
 
 **Async serving** (``repro.spgemm.pipeline``): ``plan.pipeline(depth)``
 returns an :class:`~repro.spgemm.pipeline.SpGEMMPipeline` —
@@ -145,6 +191,7 @@ throughput, and shed counts are recorded in a
 ``repro.kernels.ops.spgemm`` is a thin compatibility shim over this
 package.
 """
+from repro.spgemm.autotune import TunedConfig, autotune_plan, probe_run_count
 from repro.spgemm.cache import (
     CacheStats,
     PlanCache,
@@ -192,8 +239,11 @@ __all__ = [
     "SpGEMMPipeline",
     "SpGEMMPlan",
     "SpGEMMTicket",
+    "TunedConfig",
+    "autotune_plan",
     "default_cache",
     "pattern_digest",
+    "probe_run_count",
     "resolve_backend",
     "schedule_build_count",
     "spgemm_plan",

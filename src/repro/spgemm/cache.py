@@ -21,6 +21,7 @@ Tiers, checked in order:
 """
 from __future__ import annotations
 
+import ast
 import dataclasses
 import hashlib
 import os
@@ -76,6 +77,13 @@ class CacheStats:
     loads: int = 0  # successful plan rehydrations (== disk_hits)
     load_failures: int = 0  # well-formed files the loader rejected
     stores: int = 0  # fresh builds written back to disk
+    token_disk_hits: int = 0  # token lookups resolved through the
+    # persisted alias index (a restarted worker's token_get hitting disk
+    # without ever paying the first COO digest)
+    # Tuned-config sidecar records (the autotuner's persistence tier).
+    tuned_hits: int = 0  # tuned-config lookups served (memory or disk)
+    tuned_misses: int = 0  # lookups with no tuned record anywhere
+    tuned_stores: int = 0  # tuned configs written to the disk sidecar
     # The owning cache's PlanStore (snapshot source only, not a counter).
     store: Optional[PlanStore] = dataclasses.field(
         default=None, repr=False, compare=False
@@ -104,6 +112,10 @@ class CacheStats:
             "loads": self.loads,
             "load_failures": self.load_failures,
             "stores": self.stores,
+            "token_disk_hits": self.token_disk_hits,
+            "tuned_hits": self.tuned_hits,
+            "tuned_misses": self.tuned_misses,
+            "tuned_stores": self.tuned_stores,
             **(
                 {
                     "disk_dir": self.store.root,
@@ -172,6 +184,9 @@ class PlanCache:
         # keys. An alias outlives its plan (a rebuilt plan under the same
         # full key revives it); lookups simply miss while the plan is out.
         self._tokens: dict = {}
+        # Tuned-config sidecar records: tuned_key -> TunedConfig meta dict
+        # (the memory tier above the PlanStore sidecar entries).
+        self._tuned: dict = {}
 
     @property
     def total_bytes(self) -> int:
@@ -278,6 +293,11 @@ class PlanCache:
                                 self.stats.stores += 1
                     except Exception:
                         pass  # persistence is an optimization, never fatal
+        self._insert_plan(key, plan)
+        return plan, False
+
+    def _insert_plan(self, key: Tuple, plan) -> None:
+        """Insert one plan under its full key (LRU + budget bookkeeping)."""
         size = self._plan_size(plan)
         # Back-reference for self-eviction: plan.release() uses this to
         # drop its own (now dead) entry so the key cannot keep serving a
@@ -301,7 +321,6 @@ class PlanCache:
                     if not self._pop_lru():
                         break
             self._sync_resident()
-        return plan, False
 
     # -- pattern-token aliases (the serving warm path's fast key) ----------
 
@@ -329,7 +348,11 @@ class PlanCache:
         pattern; binding validates it against the digest whenever both
         are present — re-binding a token to a *different* full key (a
         different pattern digest, tile, group, backend, or mesh) raises
-        rather than silently serving the wrong plan."""
+        rather than silently serving the wrong plan.
+
+        With the disk tier enabled, fresh bindings are also persisted in
+        the store's token-alias index so a *restarted* worker resolves
+        the token straight to a disk load (see :meth:`token_disk_get`)."""
         with self._lock:
             old = self._tokens.get(token_key)
             if old is not None and old != key:
@@ -338,7 +361,122 @@ class PlanCache:
                     f"different plan key (pattern digest/config mismatch); "
                     f"tokens must uniquely name one sparsity pattern"
                 )
+            fresh = old is None
             self._tokens[token_key] = key
+        if fresh and self.store is not None:
+            self.store.alias_put(repr(token_key), repr(key))
+
+    def token_disk_get(self, token_key: Tuple, loader: Callable):
+        """Resolve a pattern-token alias through the store's persisted
+        index — the warm-*restart* fast key, where the in-memory token
+        map is gone but the alias (and usually the plan) survive on disk.
+
+        Returns ``(plan, fresh)``:
+
+        * ``(plan, True)`` — the aliased full key was rehydrated from
+          disk via ``loader(key, arrays, meta)``; the plan already
+          carries the caller's values and the alias was re-bound in
+          memory. The whole resolution paid **no pattern digest** —
+          counted in ``stats.token_disk_hits``.
+        * ``(plan, False)`` — the aliased plan was still resident in
+          memory under its full key (only the token map was cleared);
+          the caller rebinds values exactly as for a ``token_get`` hit.
+        * ``(None, False)`` — no disk tier, no alias, an unparseable or
+          stale alias, or a failed load; the caller falls back to the
+          digest path, which re-binds the alias.
+
+        The alias is a *pointer*, never trusted content: the entry it
+        names is still integrity-checked by the store and validated by
+        the loader, so a lying or stale index degrades to a digest-path
+        build, not a wrong plan.
+        """
+        if self.store is None:
+            return None, False
+        rep = self.store.alias_get(repr(token_key))
+        if rep is None:
+            return None, False
+        try:
+            key = ast.literal_eval(rep)
+        except (ValueError, SyntaxError):
+            return None, False
+        if not isinstance(key, tuple):
+            return None, False
+        with self._lock:
+            plan = self._plans.get(key)
+            if plan is not None:
+                # Resident under the full key (e.g. built digest-path
+                # before this token was first presented): revive the
+                # memory alias and serve as a token hit.
+                self._tokens.setdefault(token_key, key)
+                self.stats.hits += 1
+                self.stats.token_hits += 1
+                self.stats.token_disk_hits += 1
+                self._plans.move_to_end(key)
+                return plan, False
+            self.stats.misses += 1
+        payload = self.store.load(key)
+        if payload is None:
+            with self._lock:
+                self.stats.disk_misses += 1
+            return None, False
+        try:
+            plan = loader(key, *payload)
+        except Exception:
+            with self._lock:
+                self.stats.load_failures += 1
+            return None, False
+        with self._lock:
+            self.stats.disk_hits += 1
+            self.stats.loads += 1
+            self.stats.token_hits += 1
+            self.stats.token_disk_hits += 1
+            self._tokens.setdefault(token_key, key)
+        self._insert_plan(key, plan)
+        return plan, True
+
+    # -- tuned-config sidecar (the autotuner's persistence tier) -----------
+
+    @staticmethod
+    def tuned_key(base_key: Tuple) -> Tuple:
+        """The sidecar key for a plan key's tuned config. Namespaced so a
+        tuned record can never collide with a plan artifact file."""
+        return ("tuned",) + tuple(base_key)
+
+    def tuned_get(self, base_key: Tuple) -> Optional[dict]:
+        """The persisted :class:`~repro.spgemm.autotune.TunedConfig` meta
+        dict for ``base_key`` (memory first, then the disk sidecar), or
+        ``None``. A hit is what lets a warm restart apply the winning
+        config with **zero** probe executions."""
+        tkey = self.tuned_key(base_key)
+        with self._lock:
+            meta = self._tuned.get(tkey)
+            if meta is not None:
+                self.stats.tuned_hits += 1
+                return dict(meta)
+        if self.store is not None:
+            payload = self.store.load(tkey)
+            if payload is not None:
+                meta = payload[1]
+                with self._lock:
+                    self._tuned[tkey] = dict(meta)
+                    self.stats.tuned_hits += 1
+                return dict(meta)
+        with self._lock:
+            self.stats.tuned_misses += 1
+        return None
+
+    def tuned_put(self, base_key: Tuple, meta: dict) -> None:
+        """Record the winning config for ``base_key`` (memory + the disk
+        sidecar when enabled). The sidecar record rides the same
+        versioned/integrity-checked format as plan artifacts — an
+        arrays-free entry whose header digest covers the meta dict."""
+        tkey = self.tuned_key(base_key)
+        with self._lock:
+            self._tuned[tkey] = dict(meta)
+        if self.store is not None:
+            if self.store.save(tkey, {}, dict(meta)) is not None:
+                with self._lock:
+                    self.stats.tuned_stores += 1
 
     def evict(self, key: Tuple, only=None) -> bool:
         """Explicitly drop one plan from the memory tier.
@@ -380,6 +518,7 @@ class PlanCache:
             self._plans.clear()
             self._sizes.clear()
             self._tokens.clear()
+            self._tuned.clear()
             self._bytes = 0
             self.stats = CacheStats(store=self.store)
 

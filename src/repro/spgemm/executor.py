@@ -449,6 +449,16 @@ class SpGEMMExecutor:
     def can_rebind(self) -> bool:
         return self._a_inv is not None and self._b_inv is not None
 
+    def set_chunk_bytes(self, chunk_bytes: Optional[int]) -> None:
+        """Re-resolve the chunk policy with a new per-set budget.
+
+        The autotuner applies its winning ``chunk_bytes`` here after the
+        executor is built; ``REPRO_SPGEMM_CHUNK_BYTES`` still wins inside
+        :func:`resolve_chunk_bytes`, so an operator env override always
+        beats a tuned (or constructor) value.
+        """
+        self._chunk_policy = resolve_chunk_bytes(chunk_bytes)
+
     def batch_chunk(
         self,
         small_set_bytes: Optional[int] = None,
@@ -706,6 +716,16 @@ class ShardedSpGEMMExecutor:
     @property
     def can_rebind(self) -> bool:
         return self._a_inv is not None and self._b_inv is not None
+
+    def set_chunk_bytes(self, chunk_bytes: Optional[int]) -> None:
+        """Re-resolve the chunk policy with a new per-set budget.
+
+        The autotuner applies its winning ``chunk_bytes`` here after the
+        executor is built; ``REPRO_SPGEMM_CHUNK_BYTES`` still wins inside
+        :func:`resolve_chunk_bytes`, so an operator env override always
+        beats a tuned (or constructor) value.
+        """
+        self._chunk_policy = resolve_chunk_bytes(chunk_bytes)
 
     def batch_chunk(
         self,

@@ -175,9 +175,14 @@ class _PatternState:
     """One registered pattern: its plan, queue, scheduler state, and
     metric instruments."""
 
-    def __init__(self, token: str, plan: SpGEMMPlan, reg: MetricsRegistry):
+    def __init__(
+        self, token: str, plan: SpGEMMPlan, reg: MetricsRegistry,
+        depth: int = 2,
+    ):
         self.token = token
         self.plan = plan
+        self.depth = depth  # pipeline depth for this pattern (tuned or
+        # the gateway default), resolved once at registration
         self.queue: deque = deque()  # admitted, not yet dispatched
         self.pending_bytes = 0  # queued + dispatched-not-resolved
         self.deficit = 0.0  # DRR byte credit
@@ -312,14 +317,23 @@ class SpGEMMGateway:
         backend: str = "auto",
         mesh=None,
         mesh_axis=None,
+        autotune=None,
     ) -> SpGEMMPlan:
         """Resolve (build or fetch) the plan for one pattern and open it
         for ``submit``. All symbolic work happens here, once; warm
         re-registrations hit the ``pattern_token`` fast key and pay
-        neither ``to_coo`` nor the pattern digest."""
+        neither ``to_coo`` nor the pattern digest.
+
+        ``autotune=True`` (or a dict of
+        :func:`repro.spgemm.autotune.autotune_plan` overrides) applies
+        the per-pattern tuned config — searched once, persisted with the
+        plan artifacts, loaded probe-free on a warm restart. A tuned
+        pipeline depth overrides the gateway's default ``depth`` for
+        this pattern only; ``stats()`` reports the provenance."""
         plan = spgemm_plan(
             a, b, tile=tile, group=group, backend=backend, cache=self.cache,
             mesh=mesh, mesh_axis=mesh_axis, pattern_token=pattern_token,
+            autotune=autotune,
         )
         return self.register_plan(pattern_token, plan)
 
@@ -338,7 +352,16 @@ class SpGEMMGateway:
                         f"with a different plan"
                     )
                 return plan
-            self._states[token] = _PatternState(token, plan, self.metrics)
+            # Pipeline depth: the plan's tuned depth when an autotuner
+            # config is applied, else the gateway default.
+            depth = (
+                plan._default_depth()
+                if getattr(plan, "tuned_config", None) is not None
+                else self.depth
+            )
+            self._states[token] = _PatternState(
+                token, plan, self.metrics, depth=depth
+            )
         return plan
 
     def patterns(self) -> Tuple[str, ...]:
@@ -471,7 +494,7 @@ class SpGEMMGateway:
         if state.pipeline is not None:
             return state.pipeline.free_slots - planned.get(state.token, 0) > 0
         if ("create", state) in actions:  # planned earlier this round
-            return planned.get(state.token, 0) < self.depth
+            return planned.get(state.token, 0) < state.depth
         if self._pipelines_live < self.max_pipelines:
             self._pipelines_live += 1
             actions.append(("create", state))
@@ -538,7 +561,7 @@ class SpGEMMGateway:
             if kind == "close":
                 obj.close()  # idle by construction: nothing discarded
             else:  # "create"
-                obj.pipeline = SpGEMMPipeline(obj.plan, depth=self.depth)
+                obj.pipeline = SpGEMMPipeline(obj.plan, depth=obj.depth)
         now = time.perf_counter()
         for state, reqs in batches:
             state.last_active = now
@@ -644,6 +667,13 @@ class SpGEMMGateway:
                 "batch_fill": (batched / dispatches) if dispatches else 0.0,
                 "throughput_rps": (completed / elapsed) if elapsed > 0 else 0.0,
                 "latency_s": s.m_latency.snapshot(),
+                # Exec-config provenance: which tier is active ("default",
+                # "tuned", "persisted", "env-override") plus the applied
+                # TunedConfig record (probe count, measured values/s,
+                # model agreement) when the pattern was autotuned.
+                "config_source": s.plan.report.config_source,
+                "tuned": s.plan.report.tuned,
+                "pipeline_depth": s.depth,
             }
         return {
             "patterns": patterns,

@@ -18,12 +18,20 @@ Design constraints, in order:
   ``None`` so the caller falls back to a fresh symbolic build. Unreadable
   files are best-effort deleted so they cannot fail every restart.
 * **Crash-safe writes.** Payloads are written to a same-directory temp
-  file and ``os.replace``-d into place; a crash mid-save leaves either the
-  old file or a stray ``*.tmp`` (ignored and garbage-collected), never a
-  half-written readable entry.
+  file, fsynced, and ``os.replace``-d into place (with a directory fsync
+  on POSIX so the rename itself is durable); a crash — or a power cut —
+  leaves either the old file or a stray ``*.tmp`` (ignored and
+  garbage-collected), never a truncated-but-renamed readable entry.
 * **Bounded footprint.** ``max_bytes`` evicts oldest-used entries after
   each save (successful loads refresh mtime, so eviction is LRU-ish across
-  processes); the just-written file is always kept.
+  processes; equal-mtime files tie-break deterministically by name); the
+  just-written file is always kept.
+
+Besides plan artifacts the store keeps one tiny versioned index file
+(``tokens.index.json``) mapping ``pattern_token`` alias keys to full plan
+keys, written with the same atomic tmp+rename+fsync discipline — see
+:meth:`PlanStore.alias_put` and the ``token_disk_hits`` counter in
+:class:`repro.spgemm.cache.CacheStats`.
 
 The store holds only numpy arrays plus a JSON header (``allow_pickle`` is
 never enabled), so a corrupt or malicious cache directory can cause at
@@ -51,6 +59,7 @@ PLAN_DIR_ENV = "REPRO_SPGEMM_PLAN_DIR"
 
 _SUFFIX = ".plan.npz"
 _META_KEY = "__meta__"
+_ALIAS_FILE = "tokens.index.json"
 
 
 def _key_repr(key: Tuple) -> str:
@@ -139,7 +148,9 @@ class PlanStore:
         return os.path.join(self.root, plan_file_name(key))
 
     def files(self) -> List[str]:
-        """Store entries, oldest-used first (mtime ascending)."""
+        """Store entries, oldest-used first (mtime ascending; equal
+        mtimes tie-break by name so the eviction order is deterministic
+        across processes and filesystems with coarse timestamps)."""
         try:
             names = [
                 n for n in os.listdir(self.root) if n.endswith(_SUFFIX)
@@ -150,10 +161,10 @@ class PlanStore:
         for n in names:
             p = os.path.join(self.root, n)
             try:
-                paths.append((os.path.getmtime(p), p))
+                paths.append((os.path.getmtime(p), n, p))
             except OSError:  # raced with another process's eviction
                 continue
-        return [p for _, p in sorted(paths)]
+        return [p for _, _, p in sorted(paths)]
 
     def total_bytes(self) -> int:
         total = 0
@@ -193,7 +204,15 @@ class PlanStore:
             )
             with open(tmp, "wb") as f:
                 np.savez(f, **payload)
+                # fsync BEFORE the rename: os.replace is atomic for
+                # concurrent readers but not against power loss — without
+                # the flush a crash can surface a truncated file under the
+                # final name, which would then fail (and delete) on every
+                # restart's load.
+                f.flush()
+                os.fsync(f.fileno())
             os.replace(tmp, path)
+            self._fsync_dir()
         except Exception:
             try:
                 os.unlink(tmp)
@@ -203,6 +222,23 @@ class PlanStore:
         if self.max_bytes is not None:
             self._evict(keep=path)
         return path
+
+    def _fsync_dir(self) -> None:
+        """Fsync the store directory (POSIX) so a just-renamed entry's
+        directory record is durable too. Best effort — platforms that
+        cannot open a directory read-only simply skip it."""
+        if os.name != "posix":  # pragma: no cover - platform dependent
+            return
+        try:
+            fd = os.open(self.root, os.O_RDONLY)
+        except OSError:  # pragma: no cover - unreadable store dir
+            return
+        try:
+            os.fsync(fd)
+        except OSError:  # pragma: no cover - fs without dir fsync
+            pass
+        finally:
+            os.close(fd)
 
     def load(
         self, key: Tuple
@@ -248,6 +284,65 @@ class PlanStore:
             pass
         return arrays, meta
 
+    # -- pattern-token alias index -----------------------------------------
+    #
+    # One tiny JSON file mapping pattern-token alias keys (their canonical
+    # repr) to full plan keys, so a restarted worker resolves
+    # ``spgemm_plan(..., pattern_token=)`` straight to a disk load without
+    # ever paying the first COO digest. The index is an optimization with
+    # last-writer-wins semantics across processes: a lost concurrent
+    # update costs one digest on the next restart, never a wrong plan
+    # (the aliased entry is still integrity-checked on load).
+
+    def alias_path(self) -> str:
+        return os.path.join(self.root, _ALIAS_FILE)
+
+    def _read_aliases(self) -> Dict[str, str]:
+        try:
+            with open(self.alias_path(), "r", encoding="utf-8") as f:
+                doc = json.load(f)
+        except (OSError, ValueError):
+            return {}
+        if (
+            not isinstance(doc, dict)
+            or doc.get("format_version") != FORMAT_VERSION
+            or not isinstance(doc.get("aliases"), dict)
+        ):
+            return {}  # version bump / corruption degrades to a miss
+        return {
+            str(t): str(k) for t, k in doc["aliases"].items()
+        }
+
+    def alias_get(self, token_repr: str) -> Optional[str]:
+        """The full-key repr bound to one token-key repr, or ``None``."""
+        return self._read_aliases().get(token_repr)
+
+    def alias_put(self, token_repr: str, key_repr: str) -> bool:
+        """Bind (or re-confirm) one token alias; returns False if the
+        write failed (persistence is an optimization, never fatal)."""
+        with self._lock:
+            aliases = self._read_aliases()
+            if aliases.get(token_repr) == key_repr:
+                return True
+            aliases[token_repr] = key_repr
+            doc = {"format_version": FORMAT_VERSION, "aliases": aliases}
+            path = self.alias_path()
+            tmp = f"{path}.{os.getpid()}.{threading.get_ident()}.tmp"
+            try:
+                with open(tmp, "w", encoding="utf-8") as f:
+                    json.dump(doc, f, sort_keys=True)
+                    f.flush()
+                    os.fsync(f.fileno())
+                os.replace(tmp, path)
+                self._fsync_dir()
+            except Exception:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                return False
+        return True
+
     # -- eviction ----------------------------------------------------------
 
     def _evict(self, keep: Optional[str] = None) -> None:
@@ -276,10 +371,15 @@ class PlanStore:
                 self.evictions += 1
 
     def clear(self) -> None:
-        """Delete every entry, including orphaned temp files."""
+        """Delete every entry (plans and the token-alias index),
+        including orphaned temp files."""
         for p in self.files():
             try:
                 os.unlink(p)
             except OSError:
                 pass
+        try:
+            os.unlink(self.alias_path())
+        except OSError:
+            pass
         self._gc_stale_tmps(max_age_s=-1.0)  # all tmps, even fresh ones

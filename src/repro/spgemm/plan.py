@@ -35,6 +35,7 @@ value-independent, which is what makes assembly jittable and batchable.
 """
 from __future__ import annotations
 
+import os
 import threading
 from typing import Callable, List, Optional, Tuple, Union
 
@@ -60,7 +61,11 @@ from repro.core.schedule import (
 from repro.sparse.convert import bcsr_from_coo, bcsv_from_coo, to_coo
 from repro.sparse.formats import BCSR, BCSV, COO, CSR
 from repro.spgemm.cache import PlanCache, default_cache, pattern_digest
-from repro.spgemm.executor import ShardedSpGEMMExecutor, SpGEMMExecutor
+from repro.spgemm.executor import (
+    CHUNK_BYTES_ENV,
+    ShardedSpGEMMExecutor,
+    SpGEMMExecutor,
+)
 from repro.spgemm.pipeline import SpGEMMPipeline, SpGEMMTicket, _Prepared
 
 __all__ = [
@@ -93,7 +98,8 @@ _REPORT_FIELDS = (
     "pattern_key", "pattern_token", "tile", "group", "backend", "shape",
     "nnz_a", "nnz_b", "nnzb_a", "nnzb_b", "nnzb_c", "num_triples",
     "n_panels", "b_fetches", "block_omar", "schedule_builds", "cache_hits",
-    "executes", "loads", "load_hits", "cache_stats",
+    "executes", "loads", "load_hits", "cache_stats", "config_source",
+    "tuned",
 )
 
 
@@ -137,6 +143,12 @@ class PlanReport:
         pattern_token: Optional[str] = None,  # caller-supplied fast cache
         # key (spgemm_plan(..., pattern_token=)); echoed so serving
         # callers can audit which token a plan answers to
+        config_source: str = "default",  # where the active exec config
+        # came from: "default" (policy table), "tuned" (probed this
+        # process), "persisted" (tuned record loaded from disk), or
+        # "env-override" (REPRO_SPGEMM_CHUNK_BYTES wins regardless)
+        tuned: Optional[dict] = None,  # TunedConfig.to_meta() snapshot of
+        # the applied tuned config (None when untuned)
     ):
         self._pattern_key = pattern_key
         self._nnz_a = nnz_a
@@ -159,6 +171,8 @@ class PlanReport:
         self.load_hits = load_hits
         self.cache_stats = cache_stats
         self.pattern_token = pattern_token
+        self.config_source = config_source
+        self.tuned = tuned
 
     @property
     def pattern_key(self) -> str:
@@ -283,6 +297,10 @@ class SpGEMMPlan:
         # (weakref-to-cache, key) set by PlanCache on insert; release()
         # evicts through it so a dead plan never stays resident.
         self._cache_ref = None
+        # TunedConfig applied by the autotuner (None = policy defaults).
+        # Changes only the executor chunk budget and default pipeline
+        # depth — never numerics.
+        self.tuned_config = None
 
     def _make_executor(self):
         """Build the numeric executor (called once, at plan build)."""
@@ -295,6 +313,42 @@ class SpGEMMPlan:
             a_shape=self._a_shape,
             b_shape=self._b_shape,
         )
+
+    def apply_tuned_config(self, cfg) -> None:
+        """Apply an autotuner :class:`~repro.spgemm.autotune.TunedConfig`:
+        set the executor's chunk budget and make ``cfg.pipeline_depth``
+        the default for :meth:`pipeline` / :meth:`execute_stream`.
+
+        Numerics are untouched — chunk/depth are bitwise-invariant knobs,
+        and a config tuned at a different (tile, group) is applied to the
+        plan *built at that tile/group* by the autotuner, never here.
+        Report provenance: ``config_source`` becomes ``cfg.source``
+        (``"tuned"``/``"persisted"``) unless ``REPRO_SPGEMM_CHUNK_BYTES``
+        is set, which always wins and keeps ``"env-override"``.
+        """
+        if tuple(cfg.tile) != tuple(self.report.tile) or (
+            int(cfg.group) != int(self.report.group)
+        ):
+            raise ValueError(
+                f"tuned config is for tile={tuple(cfg.tile)} "
+                f"group={cfg.group}, this plan is tile={self.report.tile} "
+                f"group={self.report.group}"
+            )
+        with self._lock:
+            self.tuned_config = cfg
+            self.report.tuned = cfg.to_meta()
+            if os.environ.get(CHUNK_BYTES_ENV):
+                self.report.config_source = "env-override"
+            else:
+                self.report.config_source = (
+                    "persisted" if cfg.source == "persisted" else "tuned"
+                )
+            if self._executor is not None:
+                self._executor.set_chunk_bytes(cfg.chunk_bytes)
+
+    def _default_depth(self) -> int:
+        cfg = self.tuned_config
+        return int(cfg.pipeline_depth) if cfg is not None else 2
 
     def _stage_a(self, blocks: np.ndarray):
         """Host packed A blocks -> device layout for ``executor.run``.
@@ -403,6 +457,11 @@ class SpGEMMPlan:
             "tile": list(self.report.tile),
             "group": self.report.group,
         }
+        if self.tuned_config is not None:
+            # The tuned exec config rides inside the plan artifact too (in
+            # addition to the cache's sidecar record), so a copied/shared
+            # artifact file rehydrates fully tuned on its own.
+            meta["tuned_config"] = self.tuned_config.to_meta()
         return arrays, meta
 
     @classmethod
@@ -519,6 +578,14 @@ class SpGEMMPlan:
         if kind == "block":
             report._nnz_a = _staged_nnz(plan, "_a_blocks", "nnz_a")
             report._nnz_b = _staged_nnz(plan, "_b_blocks", "nnz_b")
+        tuned_meta = meta.get("tuned_config")
+        if tuned_meta is not None:
+            # Import here: autotune imports this module at its top level.
+            from repro.spgemm.autotune import TunedConfig
+
+            plan.apply_tuned_config(
+                TunedConfig.from_meta(dict(tuned_meta), source="persisted")
+            )
         return plan
 
     # -- numeric phase ----------------------------------------------------
@@ -709,13 +776,16 @@ class SpGEMMPlan:
 
     # -- async serving (the stage-split pipeline surface) ------------------
 
-    def pipeline(self, depth: int = 2) -> SpGEMMPipeline:
+    def pipeline(self, depth: Optional[int] = None) -> SpGEMMPipeline:
         """A bounded-depth submit/collect pipeline over this plan.
 
-        ``depth=2`` is the paper's double buffer: one step staging (H2D +
-        rebind) while one computes. See
+        ``depth=None`` takes the plan's tuned pipeline depth when an
+        autotuner config is applied, else 2 — the paper's double buffer:
+        one step staging (H2D + rebind) while one computes. See
         :class:`repro.spgemm.pipeline.SpGEMMPipeline`."""
-        return SpGEMMPipeline(self, depth=depth)
+        return SpGEMMPipeline(
+            self, depth=self._default_depth() if depth is None else depth
+        )
 
     def execute_async(self, a_vals=None, b_vals=None) -> SpGEMMTicket:
         """Dispatch one numeric phase without blocking; redeem the
@@ -728,16 +798,17 @@ class SpGEMMPlan:
         """
         return SpGEMMPipeline(self, depth=1).submit(a_vals, b_vals)
 
-    def execute_stream(self, value_iter, *, depth: int = 2):
+    def execute_stream(self, value_iter, *, depth: Optional[int] = None):
         """Stream value sets through a ``depth``-deep pipeline, yielding
-        one CSR per item in order.
+        one CSR per item in order (``depth=None``: the tuned depth if an
+        autotuner config is applied, else 2).
 
         ``value_iter`` yields ``(a_vals, b_vals)`` tuples or ``{"a_vals",
         "b_vals"}`` dicts — e.g.
         :meth:`repro.data.pipeline.SpGEMMValueStream.value_iter`. Results
         are bitwise-equal to calling ``execute`` per item; step ``s+1``'s
         staging overlaps step ``s``'s kernel throughout."""
-        return SpGEMMPipeline(self, depth=depth).stream(value_iter)
+        return self.pipeline(depth).stream(value_iter)
 
     @property
     def in_flight(self) -> int:
@@ -1169,6 +1240,11 @@ def _make_report(
         n_panels=schedule.n_panels,
         b_fetches=schedule.b_fetches(),
         block_omar=schedule.block_omar(),
+        # An operator env override beats everything (resolve_chunk_bytes);
+        # the report says so up front rather than claiming "default".
+        config_source=(
+            "env-override" if os.environ.get(CHUNK_BYTES_ENV) else "default"
+        ),
     )
 
 
@@ -1191,6 +1267,48 @@ def _normalize_tile(tile: Union[int, Tuple[int, ...]]) -> Tuple[int, int, int]:
     return tile
 
 
+def _token_disk_loader(a, b, backend, mesh, mesh_axis):
+    """The loader :meth:`PlanCache.token_disk_get` rehydrates through.
+
+    The whole point of the disk alias is to skip the pattern digest, so
+    the loader validates this call's operands against the *persisted*
+    meta instead: value dtypes must match exactly (``from_artifacts``
+    would silently cast), input types must match the persisted plan kind,
+    and ``from_artifacts`` itself re-checks element counts / block
+    geometry. Any mismatch raises -> ``load_failures`` -> the caller
+    falls back to the digest path, which settles conflicts explicitly.
+    """
+
+    def load(key: Tuple, arrays: dict, meta: dict) -> SpGEMMPlan:
+        kind = meta.get("kind")
+        if kind == "element" and isinstance(a, COO) and isinstance(b, COO):
+            if (str(np.asarray(a.val).dtype) != meta["a_dtype"]
+                    or str(np.asarray(b.val).dtype) != meta["b_dtype"]):
+                raise ValueError("value dtype differs from persisted plan")
+            a_c, b_c = _canonical_coo(a), _canonical_coo(b)
+            return SpGEMMPlan.from_artifacts(
+                arrays, meta, backend=backend, pattern_key=key[0],
+                a_vals=a_c.val, b_vals=b_c.val,
+                a_pattern=a_c, b_pattern=b_c,
+                mesh=mesh, mesh_axis=mesh_axis,
+            )
+        if kind == "block" and isinstance(a, BCSV) and isinstance(b, BCSR):
+            if (str(a.blocks.dtype) != meta["a_dtype"]
+                    or str(b.blocks.dtype) != meta["b_dtype"]):
+                raise ValueError("block dtype differs from persisted plan")
+            return SpGEMMPlan.from_artifacts(
+                arrays, meta, backend=backend, pattern_key=key[0],
+                a_blocks=a.blocks, b_blocks=b.blocks,
+                mesh=mesh, mesh_axis=mesh_axis,
+            )
+        raise ValueError(
+            f"input types {type(a).__name__}/{type(b).__name__} do not "
+            f"match persisted plan kind {kind!r}"
+        )
+
+    return load
+
+
 PlanInput = Union[np.ndarray, COO, CSR, BCSV, BCSR]
 
 
@@ -1205,6 +1323,7 @@ def spgemm_plan(
     mesh: Optional[Mesh] = None,
     mesh_axis: Optional[str] = None,
     pattern_token: Optional[str] = None,
+    autotune: Union[bool, dict, None] = None,
 ) -> SpGEMMPlan:
     """Build — or fetch from the plan cache — an :class:`SpGEMMPlan`.
 
@@ -1238,8 +1357,29 @@ def spgemm_plan(
     digest path, which raises the token conflict instead of silently
     casting. ``a=None, b=None`` with a token is a pure lookup (raises
     ``KeyError`` on a miss).
+
+    With the disk tier enabled, a token miss with operands in hand also
+    consults the store's persisted token-alias index before falling back
+    to the digest path: a restarted worker's first ``spgemm_plan`` call
+    resolves token -> full key -> disk artifacts without ever paying the
+    COO pattern digest (``stats.token_disk_hits``).
+
+    ``autotune=True`` (or a dict of
+    :func:`repro.spgemm.autotune.autotune_plan` keyword overrides, e.g.
+    ``{"repeats": 5}``) runs the per-pattern config search — or loads
+    its persisted result with zero probes — and returns the winning plan
+    with its :class:`~repro.spgemm.autotune.TunedConfig` applied.
     """
     global _SCHEDULE_BUILDS
+    if autotune:
+        from repro.spgemm.autotune import autotune_plan
+
+        spec = dict(autotune) if isinstance(autotune, dict) else {}
+        return autotune_plan(
+            a, b, tile=tile, group=group, backend=backend, cache=cache,
+            mesh=mesh, mesh_axis=mesh_axis, pattern_token=pattern_token,
+            **spec,
+        )
     backend = resolve_backend(backend)
     if cache is None:
         cache = default_cache()
@@ -1259,6 +1399,24 @@ def spgemm_plan(
             if ((dt_a is not None and dt_a != plan._a_dtype)
                     or (dt_b is not None and dt_b != plan._b_dtype)):
                 plan = None
+        if plan is None and a is not None and b is not None:
+            # Warm restart: the in-memory token map is empty but the
+            # store's alias index may resolve the token straight to a
+            # disk load — no canonicalization or digest unless needed.
+            plan, fresh = cache.token_disk_get(
+                token_key,
+                _token_disk_loader(a, b, backend, mesh, mesh_axis),
+            )
+            if fresh:
+                # Values were bound by the loader; nothing to rebind.
+                plan.report.pattern_token = str(pattern_token)
+                plan.report.cache_stats = cache.stats()
+                return plan
+            if plan is not None:
+                dt_a, dt_b = _value_dtype(a), _value_dtype(b)
+                if ((dt_a is not None and dt_a != plan._a_dtype)
+                        or (dt_b is not None and dt_b != plan._b_dtype)):
+                    plan = None
         if plan is not None:
             element = (plan._a_scatter is not None
                        and plan._b_scatter is not None)

@@ -427,3 +427,187 @@ class TestWarmRestartProcess:
         get = lambda out: [ln for ln in out.splitlines()
                            if ln.startswith("RESULT ")][0]
         assert get(cold) == get(warm), "warm results diverged from cold"
+
+
+class TestCrashConsistency:
+    """The save path's durability discipline: data is fsynced before the
+    rename, and the rename's directory record is fsynced after."""
+
+    def test_save_fsyncs_payload_and_directory(self, tmp_path, monkeypatch):
+        store = PlanStore(str(tmp_path))
+        real_fsync, synced = os.fsync, []
+
+        def recording_fsync(fd):
+            synced.append(os.fstat(fd).st_mode)
+            return real_fsync(fd)
+
+        monkeypatch.setattr(os, "fsync", recording_fsync)
+        assert store.save(TestPlanStore.KEY,
+                          {"x": np.arange(3, dtype=np.int32)}, {})
+        import stat
+        # At least the tmp payload file AND the store directory.
+        assert len(synced) >= 2
+        assert any(stat.S_ISREG(m) for m in synced), "payload not fsynced"
+        assert any(stat.S_ISDIR(m) for m in synced), "directory not fsynced"
+
+    def test_alias_put_fsyncs_index_and_directory(self, tmp_path,
+                                                  monkeypatch):
+        store = PlanStore(str(tmp_path))
+        real_fsync, synced = os.fsync, []
+
+        def recording_fsync(fd):
+            synced.append(os.fstat(fd).st_mode)
+            return real_fsync(fd)
+
+        monkeypatch.setattr(os, "fsync", recording_fsync)
+        assert store.alias_put("('tok',)", "('key',)")
+        import stat
+        assert any(stat.S_ISREG(m) for m in synced)
+        assert any(stat.S_ISDIR(m) for m in synced)
+
+    def test_failed_save_leaves_no_tmp(self, tmp_path, monkeypatch):
+        store = PlanStore(str(tmp_path))
+        monkeypatch.setattr(os, "replace",
+                            lambda *a: (_ for _ in ()).throw(OSError("no")))
+        assert store.save(TestPlanStore.KEY,
+                          {"x": np.arange(3, dtype=np.int32)}, {}) is None
+        assert [n for n in os.listdir(str(tmp_path))
+                if n.endswith(".tmp")] == []
+
+    def test_equal_mtime_order_is_name_deterministic(self, tmp_path):
+        """Filesystems with coarse timestamps give many entries one
+        mtime; files() (the eviction order) must still be deterministic:
+        (mtime, name) ascending."""
+        store = PlanStore(str(tmp_path))
+        arrays = {"x": np.arange(16, dtype=np.int32)}
+        for k in (("ka",), ("kb",), ("kc",), ("kd",)):
+            store.save(k, arrays, {})
+        t = os.path.getmtime(store.files()[0])
+        for p in store.files():
+            os.utime(p, (t, t))
+        got = store.files()
+        assert got == sorted(got), "equal-mtime order not name-sorted"
+        # Eviction follows the same deterministic order: with room for
+        # all but one file, exactly the name-smallest entry is evicted.
+        size = os.path.getsize(got[0])
+        store.max_bytes = store.total_bytes() - 1  # force one eviction
+        store._evict()
+        assert store.evictions == 1
+        left = store.files()
+        assert got[0] not in left and left == got[1:]
+        del size
+
+
+class TestAliasIndex:
+    """The pattern_token -> plan-key alias index (tokens.index.json)."""
+
+    def test_roundtrip_across_store_instances(self, tmp_path):
+        store = PlanStore(str(tmp_path))
+        assert store.alias_get("('t', 'x')") is None
+        assert store.alias_put("('t', 'x')", "('full', 'key')")
+        assert store.alias_get("('t', 'x')") == "('full', 'key')"
+        # Last-writer-wins rebind, durable across a fresh instance.
+        assert store.alias_put("('t', 'x')", "('full', 'key2')")
+        fresh = PlanStore(str(tmp_path))
+        assert fresh.alias_get("('t', 'x')") == "('full', 'key2')"
+
+    def test_bad_json_degrades_to_miss_then_recovers(self, tmp_path):
+        store = PlanStore(str(tmp_path))
+        store.alias_put("('t',)", "('k',)")
+        with open(store.alias_path(), "w", encoding="utf-8") as f:
+            f.write("{this is not json")
+        assert store.alias_get("('t',)") is None  # never raises
+        # A put after corruption rewrites a valid index.
+        assert store.alias_put("('t',)", "('k2',)")
+        assert store.alias_get("('t',)") == "('k2',)"
+
+    def test_version_bump_degrades_to_miss(self, tmp_path):
+        store = PlanStore(str(tmp_path))
+        store.alias_put("('t',)", "('k',)")
+        with open(store.alias_path(), "r", encoding="utf-8") as f:
+            doc = json.load(f)
+        doc["format_version"] = persist.FORMAT_VERSION + 1
+        with open(store.alias_path(), "w", encoding="utf-8") as f:
+            json.dump(doc, f)
+        assert store.alias_get("('t',)") is None
+
+    def test_clear_drops_alias_index(self, tmp_path):
+        store = PlanStore(str(tmp_path))
+        store.alias_put("('t',)", "('k',)")
+        assert os.path.exists(store.alias_path())
+        store.clear()
+        assert not os.path.exists(store.alias_path())
+
+
+class TestTokenDiskRestart:
+    """A restarted worker's pattern_token lookup resolves straight to a
+    disk load — no COO canonicalization digest — via the alias index."""
+
+    def _mats(self, seed=61):
+        a = _int_coo(96, 80, 0.08, seed)
+        b = COO(a.col, a.row, a.val, (80, 96))
+        return a, b
+
+    def test_token_lookup_skips_digest_on_restart(self, tmp_path,
+                                                  monkeypatch):
+        a, b = self._mats()
+        c1 = PlanCache(disk_dir=str(tmp_path))
+        p1 = spgemm_plan(a, b, tile=8, group=2, backend="jnp", cache=c1,
+                         pattern_token="svc/l0")
+        ref = p1.execute()
+        # Restart: fresh cache, and the digest is booby-trapped — the
+        # token path must never need it.
+        import repro.spgemm.plan as plan_mod
+
+        def boom(*_a, **_k):
+            raise AssertionError("pattern digest computed on token path")
+
+        monkeypatch.setattr(plan_mod, "pattern_digest", boom)
+        c2 = PlanCache(disk_dir=str(tmp_path))
+        p2 = spgemm_plan(a, b, tile=8, group=2, backend="jnp", cache=c2,
+                         pattern_token="svc/l0")
+        assert c2.stats.token_disk_hits == 1
+        assert c2.stats.disk_hits == 1 and c2.stats.load_failures == 0
+        assert p2.report.schedule_builds == 0
+        assert p2.report.pattern_token == "svc/l0"
+        got = p2.execute()
+        assert np.array_equal(got.indptr, ref.indptr)
+        assert np.array_equal(got.indices, ref.indices)
+        assert np.array_equal(got.data, ref.data)
+        # Second lookup in the restarted process: memory token hit, same
+        # plan object, no second disk load.
+        p3 = spgemm_plan(a, b, tile=8, group=2, backend="jnp", cache=c2,
+                         pattern_token="svc/l0")
+        assert p3 is p2
+        assert c2.stats.token_disk_hits == 1
+
+    def test_missing_alias_falls_back_to_digest(self, tmp_path):
+        a, b = self._mats(62)
+        c1 = PlanCache(disk_dir=str(tmp_path))
+        spgemm_plan(a, b, tile=8, group=2, backend="jnp", cache=c1,
+                    pattern_token="svc/l1")
+        # Wipe just the alias index: the token path misses, the digest
+        # path still finds the artifact on disk.
+        os.unlink(PlanStore(str(tmp_path)).alias_path())
+        c2 = PlanCache(disk_dir=str(tmp_path))
+        p2 = spgemm_plan(a, b, tile=8, group=2, backend="jnp", cache=c2,
+                         pattern_token="svc/l1")
+        assert c2.stats.token_disk_hits == 0
+        assert c2.stats.disk_hits == 1
+        assert p2.report.schedule_builds == 0
+
+    def test_stale_alias_degrades_to_rebuild(self, tmp_path):
+        """An alias pointing at a deleted artifact must degrade to the
+        normal build path, never error."""
+        a, b = self._mats(63)
+        c1 = PlanCache(disk_dir=str(tmp_path))
+        spgemm_plan(a, b, tile=8, group=2, backend="jnp", cache=c1,
+                    pattern_token="svc/l2")
+        store = PlanStore(str(tmp_path))
+        for p in store.files():
+            os.unlink(p)  # artifacts gone, alias survives
+        c2 = PlanCache(disk_dir=str(tmp_path))
+        p2 = spgemm_plan(a, b, tile=8, group=2, backend="jnp", cache=c2,
+                         pattern_token="svc/l2")
+        assert p2.report.schedule_builds == 1  # fresh symbolic build
+        assert c2.stats.token_disk_hits == 0
