@@ -1,0 +1,109 @@
+"""Static-verifier cost: what does ``validate="deep"`` add to a plan?
+
+Builds element and block plans for (scaled) Table 4 matrices and times
+:func:`repro.analysis.verify.verify_plan` plus the kernel-spec lint —
+the exact work ``spgemm_plan(..., validate="deep")`` performs at every
+plan-return and rehydrate point. The section's value is the overhead
+ratio: verification is pure host-side numpy over the symbolic schedule,
+so it must stay a small fraction of the symbolic build it guards (the
+record carries both times, and the overhead fraction is the tracked
+trajectory). CI gates on ``ok`` = every plan verifies clean with no
+kernel-lint errors; the timings are informational (shared runners are
+too jittery to gate a few-millisecond ratio).
+
+``PYTHONPATH=src python -m benchmarks.bench_verify [--scale S]``
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.analysis.kernel_lint import lint_plan_kernel_specs
+from repro.analysis.verify import verify_plan
+from repro.sparse.convert import bcsr_from_coo, bcsv_from_coo
+from repro.sparse.formats import COO
+from repro.sparse.random import suite_matrix
+from repro.spgemm import PlanCache, spgemm_plan
+
+# Smallest two Table 4 matrices at a CI-friendly scale; A @ A^T like the
+# paper's benchmark harness.
+MATRICES = [("poisson3Da", 0.02), ("2cubes_sphere", 0.004)]
+
+
+def _operands(name: str, scale: float):
+    a = suite_matrix(name, scale=scale).to_coo().sum_duplicates()
+    b = COO(a.col, a.row, a.val, (a.shape[1], a.shape[0]))
+    return a, b
+
+
+def _best_ms(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3
+
+
+def run(scale: float = 1.0, tile: int = 16, group: int = 2,
+        backend: str = "jnp", repeats: int = 3, quiet: bool = False):
+    rows = []
+    for name, base_scale in MATRICES:
+        a, b = _operands(name, base_scale * scale)
+        a_bcsv, _ = bcsv_from_coo(a, (tile, tile), group)
+        b_bcsr, _ = bcsr_from_coo(b, (tile, tile))
+        for kind, build in (
+            ("element", lambda: spgemm_plan(
+                a, b, tile=tile, group=group, backend=backend,
+                cache=PlanCache())),
+            ("block", lambda: spgemm_plan(
+                a_bcsv, b_bcsr, backend=backend, cache=PlanCache())),
+        ):
+            t0 = time.perf_counter()
+            plan = build()
+            build_ms = (time.perf_counter() - t0) * 1e3
+            report = verify_plan(plan)
+            lint = lint_plan_kernel_specs(plan)
+            verify_ms = _best_ms(lambda: verify_plan(plan), repeats)
+            rows.append({
+                "matrix": name,
+                "kind": kind,
+                "nnz": int(a.nnz),
+                "num_triples": int(plan.report.num_triples),
+                "checks": len(report.checks_run),
+                "findings": len(report.findings),
+                "lint_errors": sum(1 for f in lint
+                                   if f.severity == "error"),
+                "ok": report.ok,
+                "build_ms": build_ms,
+                "verify_ms": verify_ms,
+                "overhead_frac": verify_ms / build_ms if build_ms else None,
+            })
+    ok = all(r["ok"] and not r["lint_errors"] for r in rows)
+    if not quiet:
+        print("matrix,kind,nnz,triples,checks,findings,"
+              "build_ms,verify_ms,overhead")
+        for r in rows:
+            print(f"{r['matrix']},{r['kind']},{r['nnz']},"
+                  f"{r['num_triples']},{r['checks']},{r['findings']},"
+                  f"{r['build_ms']:.1f},{r['verify_ms']:.1f},"
+                  f"{r['overhead_frac']:.2f}")
+        print(f"ok={ok} (gate: clean verify + no kernel-lint errors)")
+    return {"rows": rows, "ok": ok}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="extra scale factor on the per-matrix defaults")
+    ap.add_argument("--tile", type=int, default=16)
+    ap.add_argument("--group", type=int, default=2)
+    ap.add_argument("--backend", default="jnp")
+    ap.add_argument("--repeats", type=int, default=3)
+    args = ap.parse_args(argv)
+    return run(scale=args.scale, tile=args.tile, group=args.group,
+               backend=args.backend, repeats=args.repeats)
+
+
+if __name__ == "__main__":
+    main()

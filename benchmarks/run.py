@@ -33,6 +33,7 @@ from benchmarks import (
     bench_omar,
     bench_runtime,
     bench_stuf,
+    bench_verify,
     roofline,
 )
 
@@ -58,6 +59,9 @@ SECTIONS = [
     # the record's "ok" flag is the CI gate: tuned >= 0.95x default.
     ("Autotune", lambda: bench_autotune.main(["--repeats", "2"])),
     ("Gateway serving — throughput/latency", bench_gateway.main),
+    # Static-verifier cost: verify_plan + kernel lint timed against the
+    # symbolic build they guard (the validate="deep" tax).
+    ("Verify", lambda: bench_verify.main(["--repeats", "2"])),
     ("Roofline (from dry-run artifacts)", roofline.main),
 ]
 

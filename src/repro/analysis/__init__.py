@@ -1,0 +1,46 @@
+"""Static analysis over SpGEMM plans, kernels, and concurrency.
+
+The plan/execute stack's correctness rests on invariants that the test
+suite only witnesses indirectly (bitwise end-to-end equality). This
+package checks them *statically* — no numeric execution, no device work:
+
+* :mod:`repro.analysis.verify` — :func:`~repro.analysis.verify.verify_plan`:
+  schedule well-formedness, dummy-pad-panel write-only discipline,
+  assembly coverage (every structural C nnz gathered exactly once),
+  write-write race freedom of the batch-folded and stacked-shard grids,
+  and shard-partition exactness (bitwise reconstruction from bounds).
+* :mod:`repro.analysis.kernel_lint` — a lint over the ``pallas_call``
+  specs in ``repro.kernels.gustavson_spgemm``: block-shape/grid
+  consistency, index maps statically in bounds, fp32 accumulation, and
+  ``dimension_semantics`` consistent with the proven race freedom.
+* :mod:`repro.analysis.locks` — instrumented lock wrappers recording the
+  lock-acquisition graph of the serving stack (gateway/pipeline/cache/
+  plan/persist) and failing on cycles (lock-order deadlock lint).
+* :mod:`repro.analysis.check` — the CLI:
+  ``python -m repro.analysis.check --paper-matrices [--shards N]``.
+
+Opt-in deep validation is wired into the plan API as
+``spgemm_plan(..., validate="deep")``: fresh builds are verified before
+they are returned, and disk rehydrates are verified *inside* the loader,
+so a corrupted-but-digest-valid artifact fails verification (and falls
+back to a clean symbolic rebuild) instead of executing.
+"""
+from repro.analysis.verify import (
+    Finding,
+    PlanVerificationError,
+    VerifyReport,
+    verify_plan,
+)
+from repro.analysis.kernel_lint import lint_kernel_module, lint_plan_kernel_specs
+from repro.analysis.locks import LockOrderMonitor, instrument_spgemm_locks
+
+__all__ = [
+    "Finding",
+    "LockOrderMonitor",
+    "PlanVerificationError",
+    "VerifyReport",
+    "instrument_spgemm_locks",
+    "lint_kernel_module",
+    "lint_plan_kernel_specs",
+    "verify_plan",
+]

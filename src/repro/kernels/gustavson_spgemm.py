@@ -241,8 +241,16 @@ def spgemm_scheduled_batch_impl(
             (bsz * stride, group * bm, bn), jnp.float32
         ),
         interpret=interpret,
+        # The batch axis is race-free, so it may be declared "parallel":
+        # element b only ever writes output slots b*stride + panel[t] with
+        # panel[t] in [0, n_panels], i.e. inside its private half-open
+        # range [b*stride, (b+1)*stride) — no slot is shared across b
+        # (proven statically per plan by
+        # repro.analysis.verify.check_batch_races). The triple axis stays
+        # "arbitrary": panels are revisited across contiguous runs of t,
+        # a sequential accumulate dependence.
         compiler_params=_CompilerParams(
-            dimension_semantics=("arbitrary", "arbitrary"),
+            dimension_semantics=("parallel", "arbitrary"),
         ),
     )(a_slot, b_slot, panel, sub_row, start, a_blocks, b_blocks)
     return out.reshape(bsz, stride, group * bm, bn)[:, :n_panels]

@@ -188,6 +188,32 @@ throughput, and shed counts are recorded in a
     res = ticket.wait()        # typed GatewayResult (never raises on shed)
     gw.close()                 # drains admitted work by default
 
+**Validation & static analysis** (``repro.analysis``): every invariant
+the numeric phase relies on — schedule well-formedness, write-only
+dummy-pad-panel discipline, assembly coverage (each structural C nnz
+gathered exactly once), write-write race freedom of the batch-folded and
+stacked-shard Pallas grids, shard-partition exactness — can be checked
+statically, on the host, without executing a single kernel::
+
+    from repro.analysis import verify_plan
+
+    report = verify_plan(plan)        # VerifyReport; report.ok / findings
+    report.raise_if_failed()          # PlanVerificationError with detail
+
+    plan = spgemm_plan(a, b, tile=16, group=2, validate="deep")
+
+``validate="deep"`` runs the verifier on whatever this call returns —
+fresh build, memory hit, or disk rehydrate. Rehydrates are verified
+*inside* the loader, so a corrupted-but-digest-valid artifact (the one
+corruption class the store's payload digest cannot catch: a consistent
+rewrite that re-signs the digest) counts as a ``load_failure`` and falls
+back to a clean symbolic rebuild instead of executing. The same checks
+back the kernel lint (``repro.analysis.kernel_lint`` — the proof
+obligation behind the batch grid's ``("parallel", "arbitrary")``
+dimension semantics), the serving stack's lock-order lint
+(``repro.analysis.locks``), and the CI gate
+``python -m repro.analysis.check --paper-matrices --shards 8``.
+
 ``repro.kernels.ops.spgemm`` is a thin compatibility shim over this
 package.
 """

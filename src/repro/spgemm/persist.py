@@ -75,7 +75,14 @@ def plan_file_name(key: Tuple) -> str:
     The full key is also stored *inside* the file and verified on load, so
     a digest collision (or a file renamed across keys) degrades to a
     rebuild, never to serving the wrong plan."""
-    h = hashlib.blake2b(_key_repr(key).encode(), digest_size=16)
+    return _file_name_for_repr(_key_repr(key))
+
+
+def _file_name_for_repr(key_repr: str) -> str:
+    """Same as :func:`plan_file_name` but from an already-repr'd key —
+    the alias index stores key reprs, so audit/alias lookups can locate
+    the target file without ``literal_eval``-ing the repr back."""
+    h = hashlib.blake2b(key_repr.encode(), digest_size=16)
     return h.hexdigest() + _SUFFIX
 
 
@@ -314,8 +321,40 @@ class PlanStore:
         }
 
     def alias_get(self, token_repr: str) -> Optional[str]:
-        """The full-key repr bound to one token-key repr, or ``None``."""
-        return self._read_aliases().get(token_repr)
+        """The full-key repr bound to one token-key repr, or ``None``.
+
+        An alias whose target artifact file no longer exists (evicted or
+        deleted out-of-band) is a **miss**, not a dangling pointer: the
+        caller would pay a doomed ``store.load`` and then the digest path
+        anyway, so resolve straight to the digest path instead. Orphans
+        are reported and pruned by :meth:`audit`."""
+        key_repr = self._read_aliases().get(token_repr)
+        if key_repr is None:
+            return None
+        target = os.path.join(self.root, _file_name_for_repr(key_repr))
+        if not os.path.exists(target):
+            return None
+        return key_repr
+
+    def _write_aliases_locked(self, aliases: Dict[str, str]) -> bool:
+        """Atomically replace the alias index (caller holds ``_lock``)."""
+        doc = {"format_version": FORMAT_VERSION, "aliases": aliases}
+        path = self.alias_path()
+        tmp = f"{path}.{os.getpid()}.{threading.get_ident()}.tmp"
+        try:
+            with open(tmp, "w", encoding="utf-8") as f:
+                json.dump(doc, f, sort_keys=True)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+            self._fsync_dir()
+        except Exception:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            return False
+        return True
 
     def alias_put(self, token_repr: str, key_repr: str) -> bool:
         """Bind (or re-confirm) one token alias; returns False if the
@@ -325,23 +364,40 @@ class PlanStore:
             if aliases.get(token_repr) == key_repr:
                 return True
             aliases[token_repr] = key_repr
-            doc = {"format_version": FORMAT_VERSION, "aliases": aliases}
-            path = self.alias_path()
-            tmp = f"{path}.{os.getpid()}.{threading.get_ident()}.tmp"
-            try:
-                with open(tmp, "w", encoding="utf-8") as f:
-                    json.dump(doc, f, sort_keys=True)
-                    f.flush()
-                    os.fsync(f.fileno())
-                os.replace(tmp, path)
-                self._fsync_dir()
-            except Exception:
-                try:
-                    os.unlink(tmp)
-                except OSError:
-                    pass
-                return False
-        return True
+            return self._write_aliases_locked(aliases)
+
+    def audit(self, prune: bool = True) -> dict:
+        """Consistency report over the store directory.
+
+        Cross-checks the token-alias index against the artifact files:
+        an alias whose target file is gone (``_evict`` unlinks files but
+        not their aliases; so does an out-of-band ``rm``) is *orphaned*.
+        With ``prune=True`` (the default) orphaned aliases are removed
+        from ``tokens.index.json`` in one atomic rewrite.
+
+        Returns ``{"files": int, "bytes": int, "aliases": int,
+        "orphaned": [token_repr, ...], "pruned": bool}``; ``pruned`` is
+        True only when an orphan was actually removed from disk."""
+        with self._lock:
+            aliases = self._read_aliases()
+            orphaned = [
+                tok for tok, key_repr in aliases.items()
+                if not os.path.exists(
+                    os.path.join(self.root, _file_name_for_repr(key_repr))
+                )
+            ]
+            pruned = False
+            if prune and orphaned:
+                for tok in orphaned:
+                    aliases.pop(tok, None)
+                pruned = self._write_aliases_locked(aliases)
+        return {
+            "files": len(self.files()),
+            "bytes": self.total_bytes(),
+            "aliases": len(aliases),
+            "orphaned": sorted(orphaned),
+            "pruned": pruned,
+        }
 
     # -- eviction ----------------------------------------------------------
 

@@ -1267,7 +1267,35 @@ def _normalize_tile(tile: Union[int, Tuple[int, ...]]) -> Tuple[int, int, int]:
     return tile
 
 
-def _token_disk_loader(a, b, backend, mesh, mesh_axis):
+def _deep_verify(plan) -> None:
+    """``validate="deep"``: run the full static verifier on ``plan``.
+
+    Raises :class:`repro.analysis.verify.PlanVerificationError` (an
+    ``AssertionError``) when any invariant fails. Called *inside* the
+    disk-rehydrate loaders, the raise is swallowed by the cache's loader
+    fallback (``load_failures``) and the plan is rebuilt symbolically —
+    a corrupted-but-digest-valid artifact fails verification, never
+    executes. Called on a fresh build or memory hit, the raise
+    propagates to the caller."""
+    from repro.analysis.verify import verify_plan
+
+    verify_plan(plan).raise_if_failed()
+
+
+def _loaded_block_plan(arrays, meta, a, b, *, backend, pattern_key,
+                       mesh, mesh_axis, validate=None):
+    """Block-path disk rehydrate (+ optional deep verification)."""
+    plan = SpGEMMPlan.from_artifacts(
+        arrays, meta, backend=backend, pattern_key=pattern_key,
+        a_blocks=a.blocks, b_blocks=b.blocks,
+        mesh=mesh, mesh_axis=mesh_axis,
+    )
+    if validate == "deep":
+        _deep_verify(plan)
+    return plan
+
+
+def _token_disk_loader(a, b, backend, mesh, mesh_axis, validate=None):
     """The loader :meth:`PlanCache.token_disk_get` rehydrates through.
 
     The whole point of the disk alias is to skip the pattern digest, so
@@ -1286,21 +1314,27 @@ def _token_disk_loader(a, b, backend, mesh, mesh_axis):
                     or str(np.asarray(b.val).dtype) != meta["b_dtype"]):
                 raise ValueError("value dtype differs from persisted plan")
             a_c, b_c = _canonical_coo(a), _canonical_coo(b)
-            return SpGEMMPlan.from_artifacts(
+            plan = SpGEMMPlan.from_artifacts(
                 arrays, meta, backend=backend, pattern_key=key[0],
                 a_vals=a_c.val, b_vals=b_c.val,
                 a_pattern=a_c, b_pattern=b_c,
                 mesh=mesh, mesh_axis=mesh_axis,
             )
+            if validate == "deep":
+                _deep_verify(plan)
+            return plan
         if kind == "block" and isinstance(a, BCSV) and isinstance(b, BCSR):
             if (str(a.blocks.dtype) != meta["a_dtype"]
                     or str(b.blocks.dtype) != meta["b_dtype"]):
                 raise ValueError("block dtype differs from persisted plan")
-            return SpGEMMPlan.from_artifacts(
+            plan = SpGEMMPlan.from_artifacts(
                 arrays, meta, backend=backend, pattern_key=key[0],
                 a_blocks=a.blocks, b_blocks=b.blocks,
                 mesh=mesh, mesh_axis=mesh_axis,
             )
+            if validate == "deep":
+                _deep_verify(plan)
+            return plan
         raise ValueError(
             f"input types {type(a).__name__}/{type(b).__name__} do not "
             f"match persisted plan kind {kind!r}"
@@ -1324,6 +1358,7 @@ def spgemm_plan(
     mesh_axis: Optional[str] = None,
     pattern_token: Optional[str] = None,
     autotune: Union[bool, dict, None] = None,
+    validate: Optional[str] = None,
 ) -> SpGEMMPlan:
     """Build — or fetch from the plan cache — an :class:`SpGEMMPlan`.
 
@@ -1369,17 +1404,35 @@ def spgemm_plan(
     ``{"repeats": 5}``) runs the per-pattern config search — or loads
     its persisted result with zero probes — and returns the winning plan
     with its :class:`~repro.spgemm.autotune.TunedConfig` applied.
+
+    ``validate="deep"`` opts this call into full static verification
+    (:func:`repro.analysis.verify.verify_plan`): the returned plan —
+    fresh build, cache hit, or disk rehydrate — has every schedule,
+    assembly, race-freedom, and shard-partition invariant checked, and a
+    failure raises :class:`~repro.analysis.verify.PlanVerificationError`.
+    Disk rehydrates are verified *inside* the loader, so a
+    corrupted-but-digest-valid artifact counts as a ``load_failure`` and
+    falls back to a clean symbolic rebuild instead of executing.
     """
     global _SCHEDULE_BUILDS
+    if validate not in (None, "deep"):
+        raise ValueError(
+            f"validate must be None or 'deep', got {validate!r}"
+        )
     if autotune:
         from repro.spgemm.autotune import autotune_plan
 
         spec = dict(autotune) if isinstance(autotune, dict) else {}
-        return autotune_plan(
+        plan = autotune_plan(
             a, b, tile=tile, group=group, backend=backend, cache=cache,
             mesh=mesh, mesh_axis=mesh_axis, pattern_token=pattern_token,
             **spec,
         )
+        # The tuned plan is verified post-hoc (the search itself builds
+        # candidates through this function without `validate`).
+        if validate == "deep":
+            _deep_verify(plan)
+        return plan
     backend = resolve_backend(backend)
     if cache is None:
         cache = default_cache()
@@ -1405,7 +1458,8 @@ def spgemm_plan(
             # disk load — no canonicalization or digest unless needed.
             plan, fresh = cache.token_disk_get(
                 token_key,
-                _token_disk_loader(a, b, backend, mesh, mesh_axis),
+                _token_disk_loader(a, b, backend, mesh, mesh_axis,
+                                   validate=validate),
             )
             if fresh:
                 # Values were bound by the loader; nothing to rebind.
@@ -1484,6 +1538,8 @@ def spgemm_plan(
                         f"pattern_token to take the full conversion path"
                     )
             plan.report.cache_stats = cache.stats()
+            if validate == "deep":
+                _deep_verify(plan)
             return plan
         if a is None or b is None:
             raise KeyError(
@@ -1510,10 +1566,9 @@ def spgemm_plan(
                 mesh=mesh, mesh_axis=mesh_axis),
             # Disk tier (warm restart): rehydrate the persisted symbolic
             # artifacts with this call's packed blocks as the values.
-            loader=lambda arrays, meta: SpGEMMPlan.from_artifacts(
-                arrays, meta, backend=backend, pattern_key=key[0],
-                a_blocks=a.blocks, b_blocks=b.blocks,
-                mesh=mesh, mesh_axis=mesh_axis),
+            loader=lambda arrays, meta: _loaded_block_plan(
+                arrays, meta, a, b, backend=backend, pattern_key=key[0],
+                mesh=mesh, mesh_axis=mesh_axis, validate=validate),
         )
         bind_token(plan, key)
         plan.report.cache_stats = cache.stats()
@@ -1527,6 +1582,8 @@ def spgemm_plan(
                 plan._b_blocks = b.blocks
                 plan._a_dev = None
                 plan._b_dev = None
+        if validate == "deep":
+            _deep_verify(plan)
         return plan
 
     bm, bk, bn = _normalize_tile(tile)
@@ -1573,12 +1630,15 @@ def spgemm_plan(
     def load(arrays: dict, meta: dict) -> SpGEMMPlan:
         # Disk tier (warm restart): the symbolic artifacts come from the
         # store, the values from this call's (already canonicalized) COOs.
-        return SpGEMMPlan.from_artifacts(
+        plan = SpGEMMPlan.from_artifacts(
             arrays, meta, backend=backend, pattern_key=pattern,
             a_vals=a_coo.val, b_vals=b_coo.val,
             a_pattern=a_coo, b_pattern=b_coo,
             mesh=mesh, mesh_axis=mesh_axis,
         )
+        if validate == "deep":
+            _deep_verify(plan)
+        return plan
 
     plan, hit = cache.get_or_build(key, build, loader=load)
     bind_token(plan, key)
@@ -1599,4 +1659,6 @@ def spgemm_plan(
                 plan.report.nnz_b, "b_vals", plan._b_shape, plan._b_dtype,
             )
             plan._b_dev = None
+    if validate == "deep":
+        _deep_verify(plan)
     return plan

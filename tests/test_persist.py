@@ -503,6 +503,11 @@ class TestAliasIndex:
 
     def test_roundtrip_across_store_instances(self, tmp_path):
         store = PlanStore(str(tmp_path))
+        # alias_get only resolves aliases whose target artifact exists
+        # (a dangling alias is a miss), so save the targets first.
+        arrays = {"x": np.arange(4, dtype=np.int32)}
+        store.save(("full", "key"), arrays, {})
+        store.save(("full", "key2"), arrays, {})
         assert store.alias_get("('t', 'x')") is None
         assert store.alias_put("('t', 'x')", "('full', 'key')")
         assert store.alias_get("('t', 'x')") == "('full', 'key')"
@@ -511,8 +516,16 @@ class TestAliasIndex:
         fresh = PlanStore(str(tmp_path))
         assert fresh.alias_get("('t', 'x')") == "('full', 'key2')"
 
+    def test_missing_target_is_a_miss(self, tmp_path):
+        store = PlanStore(str(tmp_path))
+        store.alias_put("('t', 'x')", "('full', 'never-saved')")
+        assert store.alias_get("('t', 'x')") is None
+
     def test_bad_json_degrades_to_miss_then_recovers(self, tmp_path):
         store = PlanStore(str(tmp_path))
+        arrays = {"x": np.arange(4, dtype=np.int32)}
+        store.save(("k",), arrays, {})
+        store.save(("k2",), arrays, {})
         store.alias_put("('t',)", "('k',)")
         with open(store.alias_path(), "w", encoding="utf-8") as f:
             f.write("{this is not json")
