@@ -1,0 +1,136 @@
+"""Compacted output size + device-resident chain throughput.
+
+Two claims, both CI-gated through the record's ``ok`` flag:
+
+* **Compact C is smaller**: on every (scaled) Table 4 matrix the
+  element-exact ``output="compact"`` result carries fewer C bytes than
+  the default block-structural CSR — the block result stores every
+  element of every structurally nonzero tile, explicit padding zeros
+  included, so any matrix whose pattern doesn't perfectly fill its
+  tiles (all of them) must shrink.
+* **Chains beat host round trips**: ``execute_chain`` over a composed
+  A @ B @ C plan pair must deliver >= 1.2x the throughput of the
+  pre-chaining workflow — execute stage 1, materialize the CSR on
+  host, resolve stage 2 through ``spgemm_plan(c_result, ...)`` (a warm
+  cache hit that still pays ``to_coo`` + canonicalization + the
+  pattern digest + a host-side value rebind every iteration), execute
+  stage 2. The chain skips all of it: stage 1's packed device values
+  feed stage 2's fused rebind/kernel/assembly jit directly.
+
+Results are bitwise-checked before timing.
+
+``PYTHONPATH=src python -m benchmarks.bench_chain [--scale S]``
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.sparse.formats import COO
+from repro.sparse.random import suite_matrix
+from repro.spgemm import PlanCache, spgemm_plan
+
+# Smallest two Table 4 matrices at a CI-friendly scale; A @ A^T @ A like
+# the paper's A @ A^T harness extended by one hop.
+MATRICES = [("poisson3Da", 0.02), ("2cubes_sphere", 0.004)]
+
+SPEEDUP_GATE = 1.2
+
+
+def _operands(name: str, scale: float):
+    a = suite_matrix(name, scale=scale).to_coo().sum_duplicates()
+    b = COO(a.col, a.row, a.val, (a.shape[1], a.shape[0])).sum_duplicates()
+    return a, b
+
+
+def _best_s(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _csr_bytes(csr) -> int:
+    return int(csr.data.nbytes + np.asarray(csr.indices).nbytes
+               + np.asarray(csr.indptr).nbytes)
+
+
+def run(scale: float = 1.0, tile: int = 16, group: int = 2,
+        backend: str = "jnp", repeats: int = 5, quiet: bool = False):
+    rows = []
+    for name, base_scale in MATRICES:
+        a, b = _operands(name, base_scale * scale)
+        cache = PlanCache()
+        blk = spgemm_plan(a, b, tile=tile, group=group, backend=backend,
+                          cache=cache)
+        cmp_ = spgemm_plan(a, b, tile=tile, group=group, backend=backend,
+                           cache=cache, output="compact")
+        r_blk, r_cmp = blk.execute(), cmp_.execute()
+        assert np.array_equal(r_blk.todense(), r_cmp.todense())
+        block_bytes, compact_bytes = _csr_bytes(r_blk), _csr_bytes(r_cmp)
+
+        # Chained A @ B @ A (3-stage product) vs the host round trip.
+        chain = cmp_.then(a, cache=cache)
+
+        def round_trip():
+            r = cmp_.execute()
+            p2 = spgemm_plan(r, a, tile=tile, group=group, backend=backend,
+                             cache=cache, output="compact")
+            return p2.execute()
+
+        out_chain = chain.execute()
+        out_rt = round_trip()
+        assert np.array_equal(np.asarray(out_chain.data),
+                              np.asarray(out_rt.data))
+        chain_s = _best_s(chain.execute, repeats)
+        rt_s = _best_s(round_trip, repeats)
+        values = int(out_chain.data.size)
+        speedup = rt_s / chain_s if chain_s else float("inf")
+        ok = compact_bytes < block_bytes and speedup >= SPEEDUP_GATE
+        rows.append({
+            "matrix": name,
+            "nnz_a": int(a.nnz),
+            "block_nnz_c": int(r_blk.data.size),
+            "compact_nnz_c": int(r_cmp.data.size),
+            "block_c_bytes": block_bytes,
+            "compact_c_bytes": compact_bytes,
+            "bytes_ratio": compact_bytes / block_bytes,
+            "chain_ms": chain_s * 1e3,
+            "round_trip_ms": rt_s * 1e3,
+            "chain_values_per_s": values / chain_s if chain_s else None,
+            "round_trip_values_per_s": values / rt_s if rt_s else None,
+            "chain_speedup": speedup,
+            "ok": ok,
+        })
+    ok = all(r["ok"] for r in rows)
+    if not quiet:
+        print("matrix,block_nnz,compact_nnz,bytes_ratio,"
+              "chain_ms,round_trip_ms,speedup")
+        for r in rows:
+            print(f"{r['matrix']},{r['block_nnz_c']},{r['compact_nnz_c']},"
+                  f"{r['bytes_ratio']:.2f},{r['chain_ms']:.2f},"
+                  f"{r['round_trip_ms']:.2f},{r['chain_speedup']:.2f}")
+        print(f"ok={ok} (gate: compact C bytes < block C bytes and chain "
+              f">= {SPEEDUP_GATE}x round-trip)")
+    return {"rows": rows, "ok": ok}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="extra scale factor on the per-matrix defaults")
+    ap.add_argument("--tile", type=int, default=16)
+    ap.add_argument("--group", type=int, default=2)
+    ap.add_argument("--backend", default="jnp")
+    ap.add_argument("--repeats", type=int, default=5)
+    args = ap.parse_args(argv)
+    return run(scale=args.scale, tile=args.tile, group=args.group,
+               backend=args.backend, repeats=args.repeats)
+
+
+if __name__ == "__main__":
+    main()

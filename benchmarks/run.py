@@ -26,6 +26,7 @@ maybe_apply_gpu_xla_flags()
 from benchmarks import (
     bench_arch_params,
     bench_autotune,
+    bench_chain,
     bench_chunk_knee,
     bench_energy,
     bench_gateway,
@@ -59,6 +60,9 @@ SECTIONS = [
     # the record's "ok" flag is the CI gate: tuned >= 0.95x default.
     ("Autotune", lambda: bench_autotune.main(["--repeats", "2"])),
     ("Gateway serving — throughput/latency", bench_gateway.main),
+    # Compact-vs-block C bytes + chained A@B@A vs host round trip; the
+    # record's "ok" gate: compact bytes < block bytes and chain >= 1.2x.
+    ("Chain", lambda: bench_chain.main(["--repeats", "2"])),
     # Static-verifier cost: verify_plan + kernel lint timed against the
     # symbolic build they guard (the validate="deep" tax).
     ("Verify", lambda: bench_verify.main(["--repeats", "2"])),

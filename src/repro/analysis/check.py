@@ -130,7 +130,19 @@ def _check_matrix(name: str, scale: float, shards: int, backend: str,
 
 
 def _lock_lint(failures: list) -> None:
-    """Scripted serving workload under lock instrumentation."""
+    """Scripted serving workload under lock instrumentation.
+
+    Multi-pattern by design: with a single registered pattern the
+    dispatcher only ever interleaves one pipeline's locks with the
+    gateway's, so the cross-pattern edges (dispatcher draining pattern
+    p0 while the collector retires pattern p1, both touching the shared
+    queue/stats locks) never enter the acquisition graph. Three patterns
+    submitted concurrently from separate threads — at ``max_pipelines=2``
+    so at least one pair *must* contend for a pipeline slot — exercise
+    exactly those edges before ``mon.check()`` looks for cycles.
+    """
+    import threading
+
     import numpy as np
 
     from repro.analysis.locks import LockOrderError, instrument_spgemm_locks
@@ -141,17 +153,39 @@ def _lock_lint(failures: list) -> None:
         # created at *object* construction) — build the stack fresh here.
         from repro.spgemm.gateway import SpGEMMGateway
 
-        a, b = _operands("poisson3Da", 0.01)
-        gw = SpGEMMGateway(max_pipelines=2, depth=2, max_batch=4)
-        plan = gw.register("lint/p0", a, b, tile=16, group=2, backend="jnp")
-        wa, wb = plan.value_shapes()
-        rng = np.random.default_rng(0)
-        tickets = [
-            gw.submit("lint/p0",
-                      rng.standard_normal(wa).astype(np.float32),
-                      rng.standard_normal(wb).astype(np.float32))
-            for _ in range(6)
+        specs = [
+            ("lint/p0", _operands("poisson3Da", 0.01)),
+            ("lint/p1", _operands("2cubes_sphere", 0.002)),
+            ("lint/p2", _operands("scircuit", 0.002)),
         ]
+        gw = SpGEMMGateway(max_pipelines=2, depth=2, max_batch=4)
+        plans = {
+            name: gw.register(name, a, b, tile=16, group=2, backend="jnp")
+            for name, (a, b) in specs
+        }
+        tickets: list = []
+        tickets_lock = threading.Lock()
+
+        def drive(name: str, seed: int) -> None:
+            wa, wb = plans[name].value_shapes()
+            rng = np.random.default_rng(seed)
+            for _ in range(4):
+                t = gw.submit(
+                    name,
+                    rng.standard_normal(wa).astype(np.float32),
+                    rng.standard_normal(wb).astype(np.float32),
+                )
+                with tickets_lock:
+                    tickets.append(t)
+
+        threads = [
+            threading.Thread(target=drive, args=(name, i))
+            for i, (name, _) in enumerate(specs)
+        ]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
         for t in tickets:
             t.wait(timeout=120)
         gw.close()

@@ -17,7 +17,12 @@ Two layers, both execution-free:
   prefetch arrays (pure numpy, mirroring the lambdas in
   ``spgemm_scheduled_impl`` / ``spgemm_scheduled_batch_impl``) and check
   each block index stays inside its operand, block shapes tile the
-  operand shapes exactly, and the grid sizes match the padded schedule.
+  operand shapes exactly, the grid sizes match the padded schedule, and
+  the per-grid-step VMEM working set
+  (:func:`repro.core.perfmodel.spgemm_grid_step_vmem`: one A block, one
+  B block, one ``group*bm x bn`` output panel, double-buffered) fits the
+  :data:`repro.core.perfmodel.TPU_VMEM_BYTES` budget — an oversized
+  (tile, group) is a lint finding *before* any compile attempt.
 
 The module lint pins the *source*; the plan lint pins the *instance* —
 together they are the static half of the "Pallas on every numeric path"
@@ -152,6 +157,22 @@ def lint_plan_kernel_specs(plan, bsz: int = 2) -> List[Finding]:
     bn = int(plan._b_shape[2])
     n_panels = plan.schedule.n_panels
     group = plan._group
+    # VMEM budget: the per-grid-step resident set (A block + B block +
+    # output panel, double-buffered by the Pallas pipeline) must fit
+    # per-core VMEM. An oversized config fails at compile time at best
+    # and silently spills at worst — catch it here, statically.
+    from repro.core.perfmodel import TPU_VMEM_BYTES, spgemm_grid_step_vmem
+
+    dtype_bytes = int(np.dtype(np.float32).itemsize)
+    step_bytes = spgemm_grid_step_vmem(
+        tile=(bm, bk, bn), group=group, dtype_bytes=dtype_bytes
+    )
+    if step_bytes > TPU_VMEM_BYTES:
+        _err(findings, "kernel.vmem-working-set",
+             f"per-grid-step VMEM working set "
+             f"{int(step_bytes)} B (tile=({bm}, {bk}, {bn}), "
+             f"group={group}, double-buffered) exceeds the "
+             f"{TPU_VMEM_BYTES} B per-core budget; shrink tile or group")
     # Block shapes must tile the packed operand arrays exactly: the specs
     # use (1, bm, bk) / (1, bk, bn) / (1, group*bm, bn) blocks, so the
     # trailing operand dims must equal the block dims (divisibility with

@@ -33,6 +33,18 @@ with numpy only:
    vector (:func:`~repro.core.schedule.shards_from_bounds`) reproduces
    the plan's shards **bitwise**, including each shard's rebased local
    schedule and its per-shard assembly slice.
+6. **Compact-output exactness** (``output="compact"`` plans) — the
+   compacted gather map is a well-formed canonical CSR, a *subset* of the
+   block assembly's gather space with every slot read at most once (the
+   exactly-once coverage proof carries over: block coverage + subset +
+   no duplicates), and bitwise re-derivable from the block assembly and
+   the compact pattern via
+   :func:`~repro.core.schedule.build_compact_map`.
+
+Plans also surface configuration-provenance warnings here: a persisted
+tuned config whose symbolic facts no longer match the plan
+(``apply_tuned_config`` fell back to defaults) is reported as a
+``tuned.stale-config`` warning rather than silently ignored.
 
 Everything here is value-independent; a verified plan can still compute
 wrong numbers only if the kernels themselves are wrong — which is what
@@ -50,6 +62,7 @@ from repro.core.schedule import (
     AssemblyMap,
     SpGEMMSchedule,
     build_assembly_map,
+    build_compact_map,
     shards_from_bounds,
     shards_to_bounds,
 )
@@ -59,6 +72,7 @@ __all__ = [
     "Finding",
     "PlanVerificationError",
     "VerifyReport",
+    "check_compact",
     "verify_plan",
 ]
 
@@ -492,6 +506,114 @@ def check_shard_partition(
                      f"real panels (flat space {flat})")
 
 
+def check_compact(
+    plan,
+    findings: List[Finding],
+    label: str = "compact",
+) -> None:
+    """Family 6: the compacted nnz-exact output map.
+
+    The compact map reuses the exactly-once coverage proof of the block
+    assembly (family 3): it must be a canonical CSR whose gather is a
+    duplicate-free *subset* of the block gather. Combined with the block
+    map's pad-panel and exactly-once checks, that proves every compacted
+    C element reads exactly one kernel output slot and no slot feeds two
+    elements.
+    """
+    assembly: AssemblyMap = plan.assembly
+    compact: AssemblyMap = plan.compact
+    m, n = compact.shape
+    indptr = np.asarray(compact.indptr)
+    indices = np.asarray(compact.indices)
+    gather = np.asarray(compact.gather)
+    nnz = compact.nnz
+    if tuple(compact.shape) != tuple(assembly.shape):
+        _err(findings, f"{label}.shape",
+             f"compact shape {compact.shape} != assembly {assembly.shape}")
+        return
+    if indptr.shape != (m + 1,):
+        _err(findings, f"{label}.indptr-shape",
+             f"indptr shape {indptr.shape}, expected ({m + 1},)")
+        return
+    if indptr.size and int(indptr[0]) != 0:
+        _err(findings, f"{label}.indptr-origin",
+             f"indptr[0] = {int(indptr[0])}, expected 0")
+    if (np.diff(indptr) < 0).any():
+        i = int(np.argmax(np.diff(indptr) < 0))
+        _err(findings, f"{label}.indptr-monotone",
+             f"indptr decreases at row {i}")
+    elif int(indptr[-1]) != nnz:
+        _err(findings, f"{label}.indptr-total",
+             f"indptr[-1] = {int(indptr[-1])} != nnz {nnz}")
+    if gather.shape != (nnz,):
+        _err(findings, f"{label}.gather-shape",
+             f"gather shape {gather.shape}, expected ({nnz},)")
+        return
+    _bounds_check(findings, f"{label}.indices-bounds", indices, 0,
+                  max(n, 1), "indices")
+    if nnz > assembly.nnz:
+        _err(findings, f"{label}.size",
+             f"compact map holds {nnz} nnz, more than the {assembly.nnz} "
+             f"block-structural slots it selects from")
+    if nnz and (np.diff(indptr) >= 0).all() and int(indptr[-1]) == nnz:
+        row_of = np.repeat(np.arange(m, dtype=np.int64), np.diff(indptr))
+        key = row_of * (int(n) + 1) + indices.astype(np.int64)
+        if (np.diff(key) <= 0).any():
+            i = int(np.argmax(np.diff(key) <= 0))
+            _err(findings, f"{label}.column-order",
+                 f"columns not strictly ascending within row "
+                 f"{int(row_of[i])} (nnz position {i})")
+    if nnz:
+        # Exactly-once, inherited: subset of the block gather space...
+        if not np.isin(gather, np.asarray(assembly.gather)).all():
+            _err(findings, f"{label}.subset",
+                 "compact gather reads slot(s) outside the block "
+                 "assembly's gather space")
+        # ...with no slot feeding two compacted elements.
+        uniq = np.unique(gather)
+        if uniq.shape[0] != nnz:
+            _err(findings, f"{label}.gather-duplicate",
+                 f"{nnz - uniq.shape[0]} duplicated gather index(es): two "
+                 f"compacted C entries read the same panel slot")
+    # Bitwise re-derivation from the block assembly + the compact pattern
+    # itself — the compact analogue of assembly.rebuild.
+    if not any(f.severity == "error" and f.check.startswith(label)
+               for f in findings):
+        rows = np.repeat(np.arange(m, dtype=np.int64), np.diff(indptr))
+        try:
+            fresh = build_compact_map(assembly, rows, indices)
+        except Exception as e:  # noqa: BLE001 - any failure is a finding
+            _err(findings, f"{label}.rebuild",
+                 f"compact map not re-derivable from the block assembly: "
+                 f"{type(e).__name__}: {e}")
+            return
+        for f in ("gather", "indptr", "indices"):
+            a = np.asarray(getattr(compact, f))
+            b = np.asarray(getattr(fresh, f))
+            if a.shape != b.shape or not np.array_equal(a, b):
+                _err(findings, f"{label}.rebuild",
+                     f"stored compact {f!r} differs from its re-derived "
+                     f"map")
+                return
+    # Sharded plans slice the compact map per shard; the slices must
+    # exactly tile it (the executor's packed-value layout depends on it).
+    shard_compacts = getattr(plan, "_shard_compacts", None)
+    if shard_compacts:
+        if sum(a.nnz for a in shard_compacts) != nnz:
+            _err(findings, f"{label}.shard-cover",
+                 f"shard compact maps hold "
+                 f"{sum(a.nnz for a in shard_compacts)} nnz, plan compact "
+                 f"{nnz}")
+        elif nnz:
+            cat = np.concatenate(
+                [np.asarray(a.indices) for a in shard_compacts]
+            )
+            if not np.array_equal(cat, indices):
+                _err(findings, f"{label}.shard-concat",
+                     "concatenated shard compact columns differ from the "
+                     "plan-wide compact map")
+
+
 def _rebuild_cross_check(plan, findings: List[Finding]) -> None:
     """Re-derive the assembly map from the plan's own schedule and compare
     bitwise — the strongest corruption detector for persisted artifacts
@@ -547,9 +669,28 @@ def verify_plan(
     check_assembly(schedule, plan.assembly, (plan._bm, plan._bn), findings)
     for bsz in batch_sizes:
         check_batch_races(schedule, findings, bsz=bsz)
+    if getattr(plan, "compact", None) is not None:
+        checks.append("compact")
+        check_compact(plan, findings)
     if rebuild_check:
         checks.append("assembly.rebuild")
         _rebuild_cross_check(plan, findings)
+    # Configuration provenance: a tuned config that no longer matches the
+    # plan's symbolic facts was ignored at apply time — surface it.
+    stale = getattr(plan, "_stale_tuned", None)
+    if stale is not None:
+        checks.append("tuned")
+        findings.append(Finding(
+            check="tuned.stale-config",
+            severity="warning",
+            message=(
+                f"persisted tuned config {stale!r} no longer matches the "
+                f"plan's symbolic facts; it was ignored and the plan runs "
+                f"with config_source="
+                f"{plan.report.config_source!r} (re-run the autotuner to "
+                f"refresh the sidecar)"
+            ),
+        ))
     sharded = hasattr(plan, "_shards") and getattr(plan, "n_shards", 0) > 0
     if sharded:
         checks += ["shards", "races.shards"]

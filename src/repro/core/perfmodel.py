@@ -32,6 +32,8 @@ __all__ = [
     "runtime_from_stuf",
     "energy",
     "spgemm_schedule_traffic",
+    "spgemm_grid_step_vmem",
+    "TPU_VMEM_BYTES",
     "roofline_seconds",
     "PAPER_TABLE7_MS",
     "PAPER_TABLE8_STUF",
@@ -120,6 +122,37 @@ def spgemm_schedule_traffic(
         + float(n_panels) * group * bm * bn
     )
     return {"flops": flops, "bytes": bytes_streamed}
+
+
+# Per-core VMEM capacity the Pallas kernels pipeline through (TPU v4/v5e
+# class; see the accelerator guide). The kernel lint budgets grid-step
+# working sets against this.
+TPU_VMEM_BYTES = 16 << 20
+
+
+def spgemm_grid_step_vmem(
+    *,
+    tile,
+    group: int,
+    dtype_bytes: int = 4,
+    double_buffered: bool = True,
+) -> float:
+    """Per-grid-step VMEM working set of the scheduled Pallas kernel.
+
+    Each grid step holds one A block (``bm x bk``), one B block
+    (``bk x bn``), and one output panel (``group*bm x bn``) in VMEM —
+    the same three block objects :func:`spgemm_schedule_traffic` counts
+    stream traffic for, sized per step instead of per schedule. Pallas
+    pipelines HBM copies against compute, so the resident set is double
+    the single-step footprint (``double_buffered=True``, the default the
+    kernels compile with). An oversized (tile, group) fails compilation
+    or silently spills; :func:`repro.analysis.kernel_lint.
+    lint_plan_kernel_specs` budgets this number against
+    :data:`TPU_VMEM_BYTES` *before* any compile.
+    """
+    bm, bk, bn = (int(t) for t in tile)
+    per_step = bm * bk + bk * bn + group * bm * bn
+    return float(per_step) * dtype_bytes * (2 if double_buffered else 1)
 
 
 def roofline_seconds(

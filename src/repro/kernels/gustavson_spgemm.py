@@ -46,6 +46,8 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels._compat import CompilerParams as _CompilerParams
 
 __all__ = [
+    "compact_csr_indptr_impl",
+    "compact_row_counts_impl",
     "pad_schedule_arrays",
     "spgemm_scheduled",
     "spgemm_scheduled_batch",
@@ -254,6 +256,37 @@ def spgemm_scheduled_batch_impl(
         ),
     )(a_slot, b_slot, panel, sub_row, start, a_blocks, b_blocks)
     return out.reshape(bsz, stride, group * bm, bn)[:, :n_panels]
+
+
+def compact_row_counts_impl(row_ids: jax.Array, *, m: int) -> jax.Array:
+    """Device-side per-row nnz counts of a compacted C.
+
+    ``row_ids`` is the static per-nnz row id stream of the compact
+    assembly map (CSR order). One segment-sum over a ones vector — the
+    device half of the compaction bookkeeping; the host precomputed the
+    same counts at plan time, so the two must agree elementwise (a test
+    invariant, not a runtime check). Returns ``[m]`` int32.
+    """
+    return jax.ops.segment_sum(
+        jnp.ones(row_ids.shape, jnp.int32), row_ids, num_segments=m
+    )
+
+
+def compact_csr_indptr_impl(row_ids: jax.Array, *, m: int) -> jax.Array:
+    """Device-resident CSR ``indptr`` for the compacted output.
+
+    Segment-sum counts + ``jnp.cumsum`` prefix — the device-side
+    compaction stage. Paired with the compact gather (which is fused into
+    the assemble step as one static gather), this yields a full CSR
+    replica of C on device with zero host round trips, which is what lets
+    chained plans (``repro.spgemm.plan.execute_chain``) hand C straight to
+    the next stage. Returns ``[m + 1]`` int32 (int32 covers every plan the
+    executor accepts: gather indices themselves are int32 until the flat
+    panel space exceeds 2**31).
+    """
+    counts = compact_row_counts_impl(row_ids, m=m)
+    indptr = jnp.zeros(m + 1, jnp.int32)
+    return indptr.at[1:].set(jnp.cumsum(counts))
 
 
 spgemm_scheduled_batch = jax.jit(

@@ -49,6 +49,42 @@ sharded results are **bitwise-equal** to looped single executes on every
 backend (tests/test_pallas_dispatch.py pins this, including a guard that
 pallas plans never silently fall back to the jnp reference).
 
+**Output formats & chaining**: a plan's output format is fixed at build
+time by ``spgemm_plan(..., output=)``:
+
+* ``output="block"`` (default, bitwise-unchanged): C is the structural
+  *block* CSR — every element of every structurally nonzero ``bm x bn``
+  block is stored, padding zeros included. Cheapest to assemble and the
+  right shape for block-granular consumers.
+* ``output="compact"``: C is the element-exact CSR of the structural
+  product pattern — per-row counts, prefix-summed ``indptr``, and a
+  compacted gather map (:func:`repro.core.schedule.build_compact_map`, a
+  strict subset of the block assembly's gather) drop the block-padding
+  zeros on **every** dispatch path (execute / batch / pipeline /
+  sharded). Same kernels, same bits at every stored coordinate; only
+  the output gather changes. Compact plans get their own cache keys
+  (``+ ("compact",)``) and persist the compact map beside the block
+  map (``casm.*`` arrays), so block artifacts stay byte-identical.
+
+Because C's pattern is value-independent, one plan's structural output
+(:meth:`SpGEMMPlan.output_pattern`) can seed the *next* plan without any
+host round trip or COO conversion — the graph-workload chaining layer::
+
+    p1 = spgemm_plan(a, b, tile=16, group=2, output="compact")
+    chain = p1.then(c)                 # SpGEMMChain; or chain_plans([...])
+    out = chain.execute()              # A @ B @ C, intermediates stay
+                                       # device-resident (packed values
+                                       # feed the next stage's fused jit)
+    p2 = plan_from_structural_pattern( # the explicit form: skip COO
+        p1.output_pattern(), c)        # conversion + canonicalizing sort
+
+``execute_chain`` results are bitwise-equal to independent per-stage
+executes with host round trips between them; chained plans carry their
+own ``"chain"``-digest cache keys and persist/rehydrate like any other
+plan (``CacheStats.chain_lookups`` counts the composition path). See
+``examples/spgemm_chain.py`` (A²-based triangle counting) and
+``benchmarks/bench_chain.py``.
+
 **Batch chunking**: ``execute_batch`` fuses many value sets into one
 device call only while a set's working bytes stay under a per-backend
 budget, and sizes chunks to a per-backend cache target
@@ -241,7 +277,12 @@ from repro.spgemm.pipeline import (
 from repro.spgemm.plan import (
     PlanReport,
     ShardedSpGEMMPlan,
+    SpGEMMChain,
     SpGEMMPlan,
+    StructuralPattern,
+    chain_plans,
+    execute_chain,
+    plan_from_structural_pattern,
     resolve_backend,
     schedule_build_count,
     spgemm_plan,
@@ -260,15 +301,20 @@ __all__ = [
     "PlanStore",
     "ShardedSpGEMMExecutor",
     "ShardedSpGEMMPlan",
+    "SpGEMMChain",
     "SpGEMMExecutor",
     "SpGEMMGateway",
     "SpGEMMPipeline",
     "SpGEMMPlan",
     "SpGEMMTicket",
+    "StructuralPattern",
     "TunedConfig",
     "autotune_plan",
+    "chain_plans",
     "default_cache",
+    "execute_chain",
     "pattern_digest",
+    "plan_from_structural_pattern",
     "probe_run_count",
     "resolve_backend",
     "schedule_build_count",

@@ -84,6 +84,10 @@ class CacheStats:
     tuned_hits: int = 0  # tuned-config lookups served (memory or disk)
     tuned_misses: int = 0  # lookups with no tuned record anywhere
     tuned_stores: int = 0  # tuned configs written to the disk sidecar
+    # Plan-composition lookups (plan_from_structural_pattern): plans
+    # keyed off a prior plan's structural output pattern rather than a
+    # COO digest. Also counted in hits/misses like any other lookup.
+    chain_lookups: int = 0
     # The owning cache's PlanStore (snapshot source only, not a counter).
     store: Optional[PlanStore] = dataclasses.field(
         default=None, repr=False, compare=False
@@ -116,6 +120,7 @@ class CacheStats:
             "tuned_hits": self.tuned_hits,
             "tuned_misses": self.tuned_misses,
             "tuned_stores": self.tuned_stores,
+            "chain_lookups": self.chain_lookups,
             **(
                 {
                     "disk_dir": self.store.root,

@@ -78,6 +78,7 @@ from repro.core.schedule import (
 )
 from repro.kernels import ref
 from repro.kernels.gustavson_spgemm import (
+    compact_csr_indptr_impl,
     pad_schedule_arrays,
     spgemm_scheduled_batch_impl,
     spgemm_scheduled_impl,
@@ -415,7 +416,14 @@ class SpGEMMExecutor:
         self._per_set_rows = (
             schedule.n_panels * schedule.group + schedule.num_triples
         ) * bm
+        # The assembly map is the *active* output map: the plan passes its
+        # block-structural map for output="block" and the element-exact
+        # compact map for output="compact" — every path below is a gather
+        # through it, so the compaction is fused into assembly for free.
         self._gather = jnp.asarray(assembly.gather)
+        self._out_rows = int(assembly.shape[0])
+        self._indptr_host = np.asarray(assembly.indptr)
+        self._row_ids: Optional[jax.Array] = None
         # The raw (unpadded) schedule tuple serves jnp plans on every path;
         # pallas plans get the padded 5-tuple below, shared by the single
         # and batch-folded grids.
@@ -491,6 +499,24 @@ class SpGEMMExecutor:
         if per_set <= small_set_bytes:
             return max(1, cache_bytes // max(per_set, 1))
         return 1
+
+    def device_indptr(self) -> jax.Array:
+        """Device-resident CSR ``indptr`` of the active output map.
+
+        The device half of the compaction bookkeeping: segment-sum row
+        counts + ``jnp.cumsum`` prefix over the map's static row-id stream
+        (:func:`~repro.kernels.gustavson_spgemm.compact_csr_indptr_impl`).
+        Together with the packed values a ``run*`` call returns, this is a
+        complete CSR replica of C on device — the handoff structure
+        ``execute_chain`` keeps resident between stages. Must agree
+        elementwise with the plan's host-precomputed ``indptr`` (a test
+        invariant)."""
+        if self._row_ids is None:
+            self._row_ids = jnp.asarray(np.repeat(
+                np.arange(self._out_rows, dtype=np.int32),
+                np.diff(self._indptr_host),
+            ))
+        return compact_csr_indptr_impl(self._row_ids, m=self._out_rows)
 
     def run(self, a_blocks, b_blocks) -> jax.Array:
         """Packed blocks -> packed C values (plan's backend)."""
@@ -657,8 +683,10 @@ class ShardedSpGEMMExecutor:
         self._t_max = max(1, max(s.num_triples for s in shards))
         self._p_max = max(1, max(s.n_panels for s in shards))
         self._a_max = max(1, max(s.a_hi - s.a_lo for s in shards))
+        self._assemblies = list(assemblies)
         self._nnz_c = [asm.nnz for asm in assemblies]
         self._c_max = max(1, max(self._nnz_c))
+        self._row_ids: Optional[jax.Array] = None
         # Per-shard working set mirrors SpGEMMExecutor's basis, taken over
         # the *largest* shard (each device only holds its own panels).
         self._per_set_rows = (
@@ -742,6 +770,28 @@ class ShardedSpGEMMExecutor:
         if per_set <= small_set_bytes:
             return max(1, cache_bytes // max(per_set, 1))
         return 1
+
+    def device_indptr(self) -> jax.Array:
+        """Plan-wide device CSR ``indptr`` (see
+        :meth:`SpGEMMExecutor.device_indptr`). Shard row ranges are
+        contiguous and ascending, so the plan-wide row-id stream is the
+        offset concatenation of the per-shard assembly streams — the same
+        order :meth:`_concat` emits values in."""
+        if self._row_ids is None:
+            ids, off = [], 0
+            for asm in self._assemblies:
+                rows = int(asm.shape[0])
+                ids.append(off + np.repeat(
+                    np.arange(rows, dtype=np.int32),
+                    np.diff(np.asarray(asm.indptr)),
+                ).astype(np.int32))
+                off += rows
+            self._out_rows = off
+            self._row_ids = jnp.asarray(
+                np.concatenate(ids) if ids
+                else np.zeros(0, np.int32)
+            )
+        return compact_csr_indptr_impl(self._row_ids, m=self._out_rows)
 
     def _concat(self, out: np.ndarray) -> np.ndarray:
         """Trim per-shard pads and concatenate along the shard axis (the

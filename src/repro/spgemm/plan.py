@@ -35,9 +35,10 @@ value-independent, which is what makes assembly jittable and batchable.
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 import threading
-from typing import Callable, List, Optional, Tuple, Union
+from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -51,12 +52,14 @@ from repro.core.schedule import (
     assembly_from_arrays,
     assembly_to_arrays,
     build_assembly_map,
+    build_compact_map,
     build_spgemm_schedule,
     partition_spgemm_schedule,
     schedule_from_arrays,
     schedule_to_arrays,
     shards_from_bounds,
     shards_to_bounds,
+    structural_product_pattern,
 )
 from repro.sparse.convert import bcsr_from_coo, bcsv_from_coo, to_coo
 from repro.sparse.formats import BCSR, BCSV, COO, CSR
@@ -71,7 +74,12 @@ from repro.spgemm.pipeline import SpGEMMPipeline, SpGEMMTicket, _Prepared
 __all__ = [
     "PlanReport",
     "ShardedSpGEMMPlan",
+    "SpGEMMChain",
     "SpGEMMPlan",
+    "StructuralPattern",
+    "chain_plans",
+    "execute_chain",
+    "plan_from_structural_pattern",
     "spgemm_plan",
     "resolve_backend",
     "schedule_build_count",
@@ -242,7 +250,13 @@ class SpGEMMPlan:
         a_pattern: Optional[COO] = None,
         b_pattern: Optional[COO] = None,
         assembly: Optional[AssemblyMap] = None,
+        output: str = "block",
+        compact: Optional[AssemblyMap] = None,
     ):
+        if output not in ("block", "compact"):
+            raise ValueError(
+                f"output must be 'block' or 'compact', got {output!r}"
+            )
         self.schedule = schedule
         self.backend = backend
         self.report = report
@@ -270,6 +284,27 @@ class SpGEMMPlan:
             assembly if assembly is not None
             else build_assembly_map(schedule, (self._bm, self._bn), out_shape)
         )
+        # Output mode + the element-exact compact map (tentpole). The plan
+        # always keeps the block-structural map above (its coverage /
+        # race-freedom proofs anchor the verifier); ``output="compact"``
+        # additionally precomputes the nnz-exact subset map the executor
+        # gathers through instead — explicit zero *block fill* never
+        # reaches C. Block plans have no element patterns, so their
+        # "element-exact" pattern is the block fill itself: compact
+        # degenerates to the block map (documented; the savings come from
+        # element plans, where the pattern is real).
+        self.output = output
+        self.compact: Optional[AssemblyMap] = compact
+        if output == "compact" and self.compact is None:
+            if a_pattern is not None and b_pattern is not None:
+                rows, cols = structural_product_pattern(
+                    a_pattern.row, a_pattern.col,
+                    b_pattern.row, b_pattern.col,
+                    a_pattern.shape, b_pattern.shape,
+                )
+                self.compact = build_compact_map(self.assembly, rows, cols)
+            else:
+                self.compact = self.assembly
         # Device-resident numeric executor: schedule + scatter + gather
         # staged to device once; runs the fused rebind/kernel/assembly jit.
         # ``_make_executor`` is the subclass seam — ShardedSpGEMMPlan
@@ -301,12 +336,26 @@ class SpGEMMPlan:
         # Changes only the executor chunk budget and default pipeline
         # depth — never numerics.
         self.tuned_config = None
+        # A persisted TunedConfig whose tile/group no longer matches this
+        # plan (artifact drift). Recorded instead of raising — the plan
+        # runs on policy defaults and the verifier surfaces a finding.
+        self._stale_tuned = None
+        # Device copy of B's element values, staged lazily by chained
+        # executes (stage s >= 2 reuses the plan's own B values against the
+        # previous stage's device-resident C values).
+        self._b_vals_dev = None
+
+    def _active(self) -> AssemblyMap:
+        """The output map results are wrapped in (and the executor gathers
+        through): the compact map under ``output="compact"``, else the
+        block-structural map."""
+        return self.compact if self.output == "compact" else self.assembly
 
     def _make_executor(self):
         """Build the numeric executor (called once, at plan build)."""
         return SpGEMMExecutor(
             schedule=self.schedule,
-            assembly=self.assembly,
+            assembly=self._active(),
             backend=self.backend,
             a_scatter=self._a_scatter,
             b_scatter=self._b_scatter,
@@ -325,15 +374,25 @@ class SpGEMMPlan:
         Report provenance: ``config_source`` becomes ``cfg.source``
         (``"tuned"``/``"persisted"``) unless ``REPRO_SPGEMM_CHUNK_BYTES``
         is set, which always wins and keeps ``"env-override"``.
+
+        A config whose (tile, group) does not match this plan is *stale* —
+        a persisted sidecar that drifted from the artifact it rode with.
+        Drift is not an execution error (the plan is correct on policy
+        defaults), so it is recorded instead of raised: the config is
+        ignored, ``report.config_source`` becomes ``"stale-tuned"``, and
+        :func:`repro.analysis.verify.verify_plan` surfaces a
+        ``tuned.stale-config`` finding.
         """
         if tuple(cfg.tile) != tuple(self.report.tile) or (
             int(cfg.group) != int(self.report.group)
         ):
-            raise ValueError(
-                f"tuned config is for tile={tuple(cfg.tile)} "
-                f"group={cfg.group}, this plan is tile={self.report.tile} "
-                f"group={self.report.group}"
-            )
+            with self._lock:
+                self._stale_tuned = cfg
+                self.tuned_config = None
+                self.report.tuned = None
+                if not os.environ.get(CHUNK_BYTES_ENV):
+                    self.report.config_source = "stale-tuned"
+            return
         with self._lock:
             self.tuned_config = cfg
             self.report.tuned = cfg.to_meta()
@@ -375,6 +434,7 @@ class SpGEMMPlan:
         pattern_key: str = "",
         mesh: Optional[Mesh] = None,
         mesh_axis: Optional[str] = None,
+        output: str = "block",
     ) -> "SpGEMMPlan":
         """Plan from pre-converted block formats (the ops.spgemm shim path).
 
@@ -417,6 +477,7 @@ class SpGEMMPlan:
             backend=backend,
             out_shape=(a.shape[0], b.shape[1]),
             report=report,
+            output=output,
             **extra,
         )
         report._nnz_a = _staged_nnz(plan, "_a_blocks", "nnz_a")
@@ -441,6 +502,11 @@ class SpGEMMPlan:
         arrays = {}
         arrays.update(schedule_to_arrays(self.schedule))
         arrays.update(assembly_to_arrays(self.assembly))
+        if self.output == "compact":
+            # The compact map rides the same AssemblyMap codec under its
+            # own prefix; block artifacts keep their pre-compaction byte
+            # layout exactly.
+            arrays.update(assembly_to_arrays(self.compact, prefix="casm."))
         if self._a_scatter is not None:
             arrays["a_scatter"] = self._a_scatter
         if self._b_scatter is not None:
@@ -448,6 +514,7 @@ class SpGEMMPlan:
         element = self._a_scatter is not None and self._b_scatter is not None
         meta = {
             "kind": "element" if element else "block",
+            "output": self.output,
             "backend": self.backend,
             "out_shape": [self._m, self._n],
             "a_shape": list(self._a_shape),
@@ -480,6 +547,7 @@ class SpGEMMPlan:
         b_pattern: Optional[COO] = None,
         mesh: Optional[Mesh] = None,
         mesh_axis: Optional[str] = None,
+        output: str = "block",
     ) -> "SpGEMMPlan":
         """Rehydrate a plan from persisted artifacts + this call's values.
 
@@ -499,8 +567,17 @@ class SpGEMMPlan:
             raise ValueError(
                 f"persisted backend {meta.get('backend')!r} != {backend!r}"
             )
+        if meta.get("output", "block") != output:
+            raise ValueError(
+                f"persisted output {meta.get('output', 'block')!r} != "
+                f"{output!r}"
+            )
         schedule = schedule_from_arrays(arrays)
         assembly = assembly_from_arrays(arrays)
+        compact = (
+            assembly_from_arrays(arrays, prefix="casm.")
+            if output == "compact" else None
+        )
         a_shape = tuple(int(x) for x in meta["a_shape"])
         b_shape = tuple(int(x) for x in meta["b_shape"])
         a_dtype = np.dtype(meta["a_dtype"])
@@ -573,6 +650,8 @@ class SpGEMMPlan:
             a_pattern=a_pattern,
             b_pattern=b_pattern,
             assembly=assembly,
+            output=output,
+            compact=compact,
             **extra,
         )
         if kind == "block":
@@ -648,15 +727,65 @@ class SpGEMMPlan:
         )
 
     def _wrap_packed(self, packed: np.ndarray) -> CSR:
-        """Packed C values (assembly order) -> CSR on the precomputed
+        """Packed C values (active-map order) -> CSR on the precomputed
         structure. indptr/indices are shared across this plan's results."""
-        asm = self.assembly
+        asm = self._active()
         return CSR(asm.indptr, asm.indices, packed, (self._m, self._n))
+
+    def output_pattern(self) -> "StructuralPattern":
+        """C's value-independent output structure — the seed for the next
+        plan in a chain (:func:`plan_from_structural_pattern`). Under
+        ``output="compact"`` this is the element-exact pattern; under the
+        default block output it is the block-structural pattern (explicit
+        zero fill included)."""
+        asm = self._active()
+        return StructuralPattern(asm.indptr, asm.indices, (self._m, self._n))
+
+    def device_indptr(self):
+        """Device-resident CSR ``indptr`` of the active output map (the
+        device half of the compaction bookkeeping; see
+        :meth:`repro.spgemm.executor.SpGEMMExecutor.device_indptr`).
+        Together with a ``_run_packed`` result this is a complete CSR
+        replica of C that never leaves the device."""
+        if self._executor is None:
+            return jnp.asarray(self._active().indptr.astype(np.int32))
+        return self._executor.device_indptr()
+
+    def then(self, b, **kwargs) -> "SpGEMMChain":
+        """Compose this plan with a next operand: plan ``C @ b`` directly
+        from this plan's structural output pattern (no COO conversion of
+        C) and return the two-stage :class:`SpGEMMChain`. ``kwargs``
+        forward to :func:`plan_from_structural_pattern`; tile/group/
+        backend/output default to this plan's own config. Chain further
+        with :meth:`SpGEMMChain.then`."""
+        return SpGEMMChain([self, self._plan_next(b, **kwargs)])
+
+    def _plan_next(self, b, **kwargs) -> "SpGEMMPlan":
+        kwargs.setdefault("tile", self.report.tile)
+        kwargs.setdefault("group", self.report.group)
+        kwargs.setdefault("backend", self.backend)
+        kwargs.setdefault("output", self.output)
+        kwargs.setdefault("dtype", self._a_dtype)
+        return plan_from_structural_pattern(
+            self.output_pattern(), b, **kwargs
+        )
 
     def execute(self, a_vals=None, b_vals=None) -> CSR:
         """Numeric phase only: C = A @ B for fresh values on the planned
         pattern. Zero schedule-construction work; the whole phase (kernel +
         output assembly) runs inside the executor's jit."""
+        packed = self._run_packed(a_vals, b_vals)
+        if packed is None:
+            return self._empty_csr()
+        return self._wrap_packed(np.asarray(packed))
+
+    def _run_packed(self, a_vals=None, b_vals=None):
+        """``execute``'s device core: dispatch the numeric phase and return
+        the packed C values *without* materializing them on host (``None``
+        for an empty plan). Single-device plans return a device array —
+        the handoff ``execute_chain`` keeps resident between stages;
+        sharded plans return host arrays (their executor concatenates
+        per-shard segments on host by design)."""
         with self._lock:
             self._check_released()
             # report.nnz_* is read only on the scatter (element-plan) path:
@@ -705,12 +834,49 @@ class SpGEMMPlan:
             self.report.executes += 1
 
         if self._executor is None:
-            return self._empty_csr()
+            return None
         if fused_values:
-            packed = self._executor.run_values(a_send, b_send)
-        else:
-            packed = self._executor.run(a_dev, b_dev)
-        return self._wrap_packed(np.asarray(packed))
+            return self._executor.run_values(a_send, b_send)
+        return self._executor.run(a_dev, b_dev)
+
+    def _run_packed_chained(self, c_packed):
+        """Stage ``s >= 2`` of :func:`execute_chain`: the previous stage's
+        packed C values (active-map order == canonical row-major element
+        order) are this plan's A values, consumed directly on device
+        through the fused rebind/kernel/assembly jit — no host transfer.
+        B values are the plan's own staged element values, shipped to
+        device once and reused across chain executes."""
+        if self._a_scatter is None or self._b_scatter is None:
+            raise ValueError(
+                "chained stages need element plans (built from COO/CSR "
+                "inputs or plan_from_structural_pattern)"
+            )
+        with self._lock:
+            self._check_released()
+            if self._b_vals_dev is None:
+                if self.b_pattern is None:
+                    raise ValueError(
+                        "chained stage has no B values: the plan was built "
+                        "without a B pattern (release_values?); rebuild via "
+                        "plan_from_structural_pattern with B in hand"
+                    )
+                self._b_vals_dev = jnp.asarray(
+                    np.asarray(self.b_pattern.val, dtype=self._b_dtype)
+                )
+            b_dev = self._b_vals_dev
+            self.report.executes += 1
+        if c_packed is None:  # previous stage was empty: A values all zero
+            c_packed = jnp.zeros((self.report.nnz_a,), self._a_dtype)
+        if c_packed.shape != (self.report.nnz_a,):
+            raise ValueError(
+                f"chained values: expected [{self.report.nnz_a}] from the "
+                f"previous stage, got shape {tuple(c_packed.shape)}"
+            )
+        if self._executor is None:
+            return None
+        return self._executor.run_values(
+            c_packed.astype(self._a_dtype), b_dev
+        )
 
     __call__ = execute
 
@@ -960,6 +1126,7 @@ class SpGEMMPlan:
             self._check_no_inflight("release device values")
             self._a_dev = None
             self._b_dev = None
+            self._b_vals_dev = None
 
     def release_values(self) -> None:
         """Drop host AND device copies of the packed block values.
@@ -976,6 +1143,7 @@ class SpGEMMPlan:
             self._check_no_inflight("release values")
             self._a_dev = None
             self._b_dev = None
+            self._b_vals_dev = None
             self._a_blocks = None
             self._b_blocks = None
 
@@ -993,6 +1161,7 @@ class SpGEMMPlan:
             self._released = True
             self._a_dev = None
             self._b_dev = None
+            self._b_vals_dev = None
             self._a_blocks = None
             self._b_blocks = None
             self._executor = None
@@ -1019,7 +1188,8 @@ class SpGEMMPlan:
         for pat in (self.a_pattern, self.b_pattern):
             if pat is not None:
                 arrays += [pat.row, pat.col, pat.val]
-        return self.assembly.nbytes() + sum(
+        compact = self.compact.nbytes() if self.compact is not None else 0
+        return self.assembly.nbytes() + compact + sum(
             a.nbytes for a in arrays if a is not None
         )
 
@@ -1065,6 +1235,7 @@ class ShardedSpGEMMPlan(SpGEMMPlan):
         self._preloaded_shards = shards
         self._shards: List[ScheduleShard] = []
         self._shard_assemblies: List[AssemblyMap] = []
+        self._shard_compacts: List[AssemblyMap] = []
         super().__init__(**kw)
 
     def _make_executor(self):
@@ -1090,6 +1261,31 @@ class ShardedSpGEMMPlan(SpGEMMPlan):
             raise AssertionError(
                 "shard assembly slices do not cover the plan assembly"
             )
+        # Compact output: each shard gathers through its own slice of the
+        # element-exact pattern (subset of its block map, rows rebased to
+        # the shard). Shard row ranges are contiguous, so the plan-wide
+        # compact rows split into per-shard runs by searchsorted; the
+        # executor's pad-trim/concat bookkeeping then counts compact nnz.
+        active_assemblies = self._shard_assemblies
+        if self.output == "compact":
+            rows_c = np.repeat(
+                np.arange(self._m, dtype=np.int64),
+                np.diff(self.compact.indptr),
+            )
+            self._shard_compacts = []
+            for sh, asm in zip(self._shards, self._shard_assemblies):
+                row_lo = min(sh.group_lo * g * bm, self._m)
+                row_hi = min(sh.group_hi * g * bm, self._m)
+                lo, hi = np.searchsorted(rows_c, [row_lo, row_hi])
+                self._shard_compacts.append(build_compact_map(
+                    asm, rows_c[lo:hi] - row_lo,
+                    self.compact.indices[lo:hi],
+                ))
+            if sum(a.nnz for a in self._shard_compacts) != self.compact.nnz:
+                raise AssertionError(
+                    "shard compact slices do not cover the compact map"
+                )
+            active_assemblies = self._shard_compacts
         a_val_bounds = None
         if self._a_scatter is not None:
             # Element values are canonical row-major, and shards own
@@ -1103,7 +1299,7 @@ class ShardedSpGEMMPlan(SpGEMMPlan):
             ]).astype(np.int64)
         return ShardedSpGEMMExecutor(
             shards=self._shards,
-            assemblies=self._shard_assemblies,
+            assemblies=active_assemblies,
             mesh=self.mesh,
             axis=self.mesh_axis,
             backend=self.backend,
@@ -1140,7 +1336,8 @@ class ShardedSpGEMMPlan(SpGEMMPlan):
 
     def host_nbytes(self) -> int:
         return super().host_nbytes() + sum(
-            a.nbytes() for a in self._shard_assemblies
+            a.nbytes()
+            for a in self._shard_assemblies + self._shard_compacts
         )
 
     def persist_artifacts(self) -> Tuple[dict, dict]:
@@ -1283,19 +1480,20 @@ def _deep_verify(plan) -> None:
 
 
 def _loaded_block_plan(arrays, meta, a, b, *, backend, pattern_key,
-                       mesh, mesh_axis, validate=None):
+                       mesh, mesh_axis, validate=None, output="block"):
     """Block-path disk rehydrate (+ optional deep verification)."""
     plan = SpGEMMPlan.from_artifacts(
         arrays, meta, backend=backend, pattern_key=pattern_key,
         a_blocks=a.blocks, b_blocks=b.blocks,
-        mesh=mesh, mesh_axis=mesh_axis,
+        mesh=mesh, mesh_axis=mesh_axis, output=output,
     )
     if validate == "deep":
         _deep_verify(plan)
     return plan
 
 
-def _token_disk_loader(a, b, backend, mesh, mesh_axis, validate=None):
+def _token_disk_loader(a, b, backend, mesh, mesh_axis, validate=None,
+                       output="block"):
     """The loader :meth:`PlanCache.token_disk_get` rehydrates through.
 
     The whole point of the disk alias is to skip the pattern digest, so
@@ -1318,7 +1516,7 @@ def _token_disk_loader(a, b, backend, mesh, mesh_axis, validate=None):
                 arrays, meta, backend=backend, pattern_key=key[0],
                 a_vals=a_c.val, b_vals=b_c.val,
                 a_pattern=a_c, b_pattern=b_c,
-                mesh=mesh, mesh_axis=mesh_axis,
+                mesh=mesh, mesh_axis=mesh_axis, output=output,
             )
             if validate == "deep":
                 _deep_verify(plan)
@@ -1330,7 +1528,7 @@ def _token_disk_loader(a, b, backend, mesh, mesh_axis, validate=None):
             plan = SpGEMMPlan.from_artifacts(
                 arrays, meta, backend=backend, pattern_key=key[0],
                 a_blocks=a.blocks, b_blocks=b.blocks,
-                mesh=mesh, mesh_axis=mesh_axis,
+                mesh=mesh, mesh_axis=mesh_axis, output=output,
             )
             if validate == "deep":
                 _deep_verify(plan)
@@ -1359,6 +1557,7 @@ def spgemm_plan(
     pattern_token: Optional[str] = None,
     autotune: Union[bool, dict, None] = None,
     validate: Optional[str] = None,
+    output: str = "block",
 ) -> SpGEMMPlan:
     """Build — or fetch from the plan cache — an :class:`SpGEMMPlan`.
 
@@ -1413,11 +1612,29 @@ def spgemm_plan(
     Disk rehydrates are verified *inside* the loader, so a
     corrupted-but-digest-valid artifact counts as a ``load_failure`` and
     falls back to a clean symbolic rebuild instead of executing.
+
+    ``output="compact"`` selects the element-exact (nnz-compacted) output
+    path: the plan additionally precomputes the compact gather map and
+    results store only C's true structural nonzeros — no explicit zero
+    block fill. The default ``output="block"`` is bitwise-unchanged from
+    the pre-compaction behavior (same keys, same artifacts, same CSR).
+    Compact plans live under their own cache keys (the base key suffixed
+    ``"compact"``), so both modes of one pattern can be resident at once.
     """
     global _SCHEDULE_BUILDS
     if validate not in (None, "deep"):
         raise ValueError(
             f"validate must be None or 'deep', got {validate!r}"
+        )
+    if output not in ("block", "compact"):
+        raise ValueError(
+            f"output must be 'block' or 'compact', got {output!r}"
+        )
+    if autotune and output != "block":
+        raise ValueError(
+            "autotune composes with output='block' only: tune the block "
+            "plan, then request output='compact' separately (tuned knobs "
+            "are output-independent)"
         )
     if autotune:
         from repro.spgemm.autotune import autotune_plan
@@ -1437,11 +1654,14 @@ def spgemm_plan(
     if cache is None:
         cache = default_cache()
     shard_key = _mesh_key(mesh, mesh_axis)
+    # Compact plans get their own keys by suffix; block keys (and thus
+    # every pre-compaction persisted artifact) are byte-identical.
+    out_key = ("compact",) if output == "compact" else ()
 
     token_key = None
     if pattern_token is not None:
         token_key = ("token", str(pattern_token), _normalize_tile(tile),
-                     int(group), backend, shard_key)
+                     int(group), backend, shard_key) + out_key
         plan = cache.token_get(token_key)
         # Value dtype is part of the full (digest) key but not the token
         # key — a dtype mismatch must not be served (and silently cast) by
@@ -1459,7 +1679,7 @@ def spgemm_plan(
             plan, fresh = cache.token_disk_get(
                 token_key,
                 _token_disk_loader(a, b, backend, mesh, mesh_axis,
-                                   validate=validate),
+                                   validate=validate, output=output),
             )
             if fresh:
                 # Values were bound by the loader; nothing to rebind.
@@ -1559,16 +1779,18 @@ def spgemm_plan(
                 f"block inner dims mismatch: {a.block_shape} vs {b.block_shape}"
             )
         tile3 = (a.block_shape[0], a.block_shape[1], b.block_shape[1])
-        key = (_block_pattern_key(a, b), tile3, a.group, backend, shard_key)
+        key = (_block_pattern_key(a, b), tile3, a.group, backend,
+               shard_key) + out_key
         plan, hit = cache.get_or_build(
             key, lambda: SpGEMMPlan.from_blocks(
                 a, b, backend=backend, pattern_key=key[0],
-                mesh=mesh, mesh_axis=mesh_axis),
+                mesh=mesh, mesh_axis=mesh_axis, output=output),
             # Disk tier (warm restart): rehydrate the persisted symbolic
             # artifacts with this call's packed blocks as the values.
             loader=lambda arrays, meta: _loaded_block_plan(
                 arrays, meta, a, b, backend=backend, pattern_key=key[0],
-                mesh=mesh, mesh_axis=mesh_axis, validate=validate),
+                mesh=mesh, mesh_axis=mesh_axis, validate=validate,
+                output=output),
         )
         bind_token(plan, key)
         plan.report.cache_stats = cache.stats()
@@ -1599,7 +1821,7 @@ def spgemm_plan(
         meta=("coo", a_coo.shape, b_coo.shape,
               str(a_coo.val.dtype), str(b_coo.val.dtype)),
     )
-    key = (pattern, (bm, bk, bn), group, backend, shard_key)
+    key = (pattern, (bm, bk, bn), group, backend, shard_key) + out_key
 
     def build() -> SpGEMMPlan:
         global _SCHEDULE_BUILDS
@@ -1624,6 +1846,7 @@ def spgemm_plan(
             b_scatter=b_scatter,
             a_pattern=a_coo,
             b_pattern=b_coo,
+            output=output,
             **extra,
         )
 
@@ -1634,7 +1857,7 @@ def spgemm_plan(
             arrays, meta, backend=backend, pattern_key=pattern,
             a_vals=a_coo.val, b_vals=b_coo.val,
             a_pattern=a_coo, b_pattern=b_coo,
-            mesh=mesh, mesh_axis=mesh_axis,
+            mesh=mesh, mesh_axis=mesh_axis, output=output,
         )
         if validate == "deep":
             _deep_verify(plan)
@@ -1659,6 +1882,287 @@ def spgemm_plan(
                 plan.report.nnz_b, "b_vals", plan._b_shape, plan._b_dtype,
             )
             plan._b_dev = None
+    if validate == "deep":
+        _deep_verify(plan)
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Structural plan composition (the chaining layer)
+#
+# C's pattern is value-independent, so one plan's output *structure* fully
+# determines the next plan's A-side input structure — no values, no COO
+# conversion, no canonicalizing sort. These are the pieces that turn
+# one-shot SpGEMM into device-resident chains (A @ B @ C, A^k): a plan's
+# ``output_pattern()`` feeds ``plan_from_structural_pattern``, and
+# ``execute_chain`` hands each stage's packed device values straight to the
+# next stage's fused rebind/kernel/assembly jit.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StructuralPattern:
+    """A CSR-shaped structural sparsity pattern, detached from any values.
+
+    This is a plan's value-independent output structure
+    (:meth:`SpGEMMPlan.output_pattern`) in the exact arrays the plan's
+    results share — and the seed :func:`plan_from_structural_pattern`
+    builds the next chained plan from. The pattern order (row-major,
+    strictly ascending ``(row, col)``) is canonical COO order, which is
+    what lets a previous stage's packed values bind positionally as the
+    next stage's A values.
+    """
+
+    indptr: np.ndarray  # [m + 1] CSR row pointers
+    indices: np.ndarray  # [nnz] int32 CSR column ids
+    shape: Tuple[int, int]
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    def rows(self) -> np.ndarray:
+        """The expanded per-element row ids (canonical order)."""
+        return np.repeat(
+            np.arange(self.shape[0], dtype=np.int64), np.diff(self.indptr)
+        )
+
+    def to_coo(self, val=None, dtype=np.float32) -> COO:
+        """The pattern as canonical COO; ``val=None`` fills placeholder
+        zeros (chained plans bind real values per execute)."""
+        if val is None:
+            val = np.zeros(self.nnz, dtype)
+        return COO(self.rows(), self.indices, val, self.shape)
+
+
+def _check_chain_link(p: SpGEMMPlan, q: SpGEMMPlan, stage: int) -> None:
+    """Stage ``stage + 1``'s A pattern must be stage ``stage``'s output
+    pattern, elementwise — the positional-binding contract of
+    :func:`execute_chain`."""
+    if q._a_scatter is None or q._b_scatter is None:
+        raise ValueError(
+            f"chain stage {stage + 1} is not an element plan; chained "
+            f"stages are built by plan_from_structural_pattern"
+        )
+    asm = p._active()
+    pat = q.a_pattern
+    if pat is None or tuple(pat.shape) != (p._m, p._n):
+        got = None if pat is None else tuple(pat.shape)
+        raise ValueError(
+            f"chain stage {stage + 1}: A shape {got} != stage {stage} "
+            f"output shape {(p._m, p._n)}"
+        )
+    if q.report.nnz_a != asm.nnz or not (
+        np.array_equal(pat.col, asm.indices)
+        and np.array_equal(
+            np.bincount(pat.row, minlength=p._m), np.diff(asm.indptr)
+        )
+    ):
+        raise ValueError(
+            f"chain stage {stage + 1}: A pattern does not match stage "
+            f"{stage}'s output pattern; build it from that plan's "
+            f"output_pattern() (plan.then / plan_from_structural_pattern)"
+        )
+
+
+class SpGEMMChain:
+    """An ordered composition of plans: ``A @ B1 @ B2 @ ...`` where stage
+    ``s + 1``'s A pattern *is* stage ``s``'s structural output pattern
+    (validated at construction). :meth:`execute` runs the whole chain with
+    every intermediate staying device-resident — the only D2H transfer is
+    the final result (single-device plans; sharded stages concatenate
+    per-shard segments on host by design)."""
+
+    def __init__(self, plans: Sequence[SpGEMMPlan]):
+        plans = list(plans)
+        if not plans:
+            raise ValueError("a chain needs at least one plan")
+        for s, (p, q) in enumerate(zip(plans, plans[1:])):
+            _check_chain_link(p, q, s)
+        self.plans = plans
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.plans[0]._m, self.plans[-1]._n)
+
+    def then(self, b, **kwargs) -> "SpGEMMChain":
+        """Extend the chain by one more operand (see
+        :meth:`SpGEMMPlan.then`)."""
+        return SpGEMMChain(
+            self.plans + [self.plans[-1]._plan_next(b, **kwargs)]
+        )
+
+    def output_pattern(self) -> StructuralPattern:
+        return self.plans[-1].output_pattern()
+
+    def device_indptr(self):
+        return self.plans[-1].device_indptr()
+
+    def execute(self, a_vals=None, b_vals=None) -> CSR:
+        """Run the chain; ``a_vals``/``b_vals`` are stage 1's operands
+        (same contract as :meth:`SpGEMMPlan.execute`), later stages use
+        their own staged B values."""
+        return execute_chain(self.plans, a_vals=a_vals, b_vals=b_vals)
+
+    __call__ = execute
+
+
+def chain_plans(plans: Sequence[SpGEMMPlan]) -> SpGEMMChain:
+    """Validate and wrap an ordered plan list as a :class:`SpGEMMChain`
+    (each plan's A pattern must be its predecessor's output pattern)."""
+    return SpGEMMChain(plans)
+
+
+def execute_chain(plans, a_vals=None, b_vals=None) -> CSR:
+    """Run ``A @ B1 @ B2 @ ...`` through a validated plan chain with
+    intermediates device-resident.
+
+    Stage 1 dispatches exactly like ``plans[0].execute`` but keeps its
+    packed C values on device; every later stage consumes the previous
+    packed values directly as its A values (active-map order is canonical
+    element order, so the binding is positional) against its own staged B
+    values — no intermediate CSR wrap, no host transfer, no re-staging.
+    The final stage's values are materialized once and wrapped in its
+    precomputed CSR structure. Bitwise-equal to executing each stage
+    independently with a host round trip between them (same jits, same
+    operand bits).
+
+    ``plans`` is a :class:`SpGEMMChain` or a plan sequence (validated
+    here when raw); ``a_vals``/``b_vals`` optionally rebind stage 1's
+    operands.
+    """
+    if isinstance(plans, SpGEMMChain):
+        plans = plans.plans
+    else:
+        plans = list(plans)
+        if not plans:
+            raise ValueError("a chain needs at least one plan")
+        for s, (p, q) in enumerate(zip(plans, plans[1:])):
+            _check_chain_link(p, q, s)
+    packed = plans[0]._run_packed(a_vals, b_vals)
+    for stage in plans[1:]:
+        packed = stage._run_packed_chained(packed)
+    last = plans[-1]
+    if packed is None:
+        return last._empty_csr()
+    return last._wrap_packed(np.asarray(packed))
+
+
+def plan_from_structural_pattern(
+    c_pattern: StructuralPattern,
+    b,
+    *,
+    tile: Union[int, Tuple[int, ...]] = 64,
+    group: int = 4,
+    backend: str = "auto",
+    cache: Optional[PlanCache] = None,
+    mesh: Optional[Mesh] = None,
+    mesh_axis: Optional[str] = None,
+    output: str = "block",
+    validate: Optional[str] = None,
+    dtype=np.float32,
+) -> SpGEMMPlan:
+    """Plan ``C @ b`` directly from a prior plan's structural output
+    pattern — the chaining fast path.
+
+    Where :func:`spgemm_plan` would convert C to COO and pay
+    ``sum_duplicates``'s canonicalizing sort plus a digest over expanded
+    row/col arrays, this builds the A-side COO *positionally* from the
+    CSR pattern (already canonical by construction) and fingerprints the
+    CSR arrays themselves. A values are zero placeholders — chained
+    executes bind the previous stage's packed device values per run;
+    ``dtype`` fixes the value dtype those stages flow at (it is part of
+    the cache key, like every plan's value dtype).
+
+    Chained plans get their own cache keys (a ``"chain"``-tagged digest)
+    and the same two-tier :class:`~repro.spgemm.cache.PlanCache`
+    persistence as any other plan — a warm restart rehydrates the whole
+    chain from disk without re-running any symbolic phase.
+    """
+    backend = resolve_backend(backend)
+    if validate not in (None, "deep"):
+        raise ValueError(
+            f"validate must be None or 'deep', got {validate!r}"
+        )
+    if output not in ("block", "compact"):
+        raise ValueError(
+            f"output must be 'block' or 'compact', got {output!r}"
+        )
+    if cache is None:
+        cache = default_cache()
+    bm, bk, bn = _normalize_tile(tile)
+    b_coo = _canonical_coo(to_coo(b))
+    if c_pattern.shape[1] != b_coo.shape[0]:
+        raise ValueError(
+            f"inner dims mismatch: {c_pattern.shape} x {b_coo.shape}"
+        )
+    a_coo = c_pattern.to_coo(dtype=dtype)
+    shard_key = _mesh_key(mesh, mesh_axis)
+    out_key = ("compact",) if output == "compact" else ()
+    pattern = pattern_digest(
+        c_pattern.indptr, c_pattern.indices, b_coo.row, b_coo.col,
+        meta=("chain", c_pattern.shape, b_coo.shape,
+              str(np.dtype(dtype)), str(b_coo.val.dtype)),
+    )
+    key = (pattern, (bm, bk, bn), group, backend, shard_key) + out_key
+    with cache._lock:
+        cache.stats.chain_lookups += 1
+
+    def build() -> SpGEMMPlan:
+        global _SCHEDULE_BUILDS
+        a_bcsv, a_scatter = bcsv_from_coo(a_coo, (bm, bk), group)
+        b_bcsr, b_scatter = bcsr_from_coo(b_coo, (bk, bn))
+        schedule = build_spgemm_schedule(a_bcsv, b_bcsr)
+        _SCHEDULE_BUILDS += 1
+        report = _make_report(
+            pattern, (bm, bk, bn), group, backend,
+            (c_pattern.shape[0], b_coo.shape[1]),
+            a_coo.nnz, b_coo.nnz, a_bcsv.nnzb, b_bcsr.nnzb, schedule,
+        )
+        plan_cls, extra = _resolve_plan_cls(mesh, mesh_axis)
+        return plan_cls(
+            schedule=schedule,
+            a_blocks=a_bcsv.blocks,
+            b_blocks=b_bcsr.blocks,
+            backend=backend,
+            out_shape=(c_pattern.shape[0], b_coo.shape[1]),
+            report=report,
+            a_scatter=a_scatter,
+            b_scatter=b_scatter,
+            a_pattern=a_coo,
+            b_pattern=b_coo,
+            output=output,
+            **extra,
+        )
+
+    def load(arrays: dict, meta: dict) -> SpGEMMPlan:
+        plan = SpGEMMPlan.from_artifacts(
+            arrays, meta, backend=backend, pattern_key=pattern,
+            a_vals=a_coo.val, b_vals=b_coo.val,
+            a_pattern=a_coo, b_pattern=b_coo,
+            mesh=mesh, mesh_axis=mesh_axis, output=output,
+        )
+        if validate == "deep":
+            _deep_verify(plan)
+        return plan
+
+    plan, hit = cache.get_or_build(key, build, loader=load)
+    plan.report.cache_stats = cache.stats()
+    if hit:
+        with plan._lock:
+            plan.report.cache_hits += 1
+            # Pattern-equal hit serving a possibly different B operand:
+            # rebind this call's B values (blocks + the chained-stage
+            # device copy) so both standalone and chained executes see
+            # them. A-side placeholders are untouched — chain runs bind A
+            # per execute, on device.
+            plan._b_blocks = plan._rebind(
+                b_coo.val, plan._b_blocks, plan._b_scatter,
+                plan.report.nnz_b, "b_vals", plan._b_shape, plan._b_dtype,
+            )
+            plan._b_dev = None
+            plan._b_vals_dev = None
+            plan.b_pattern = b_coo
     if validate == "deep":
         _deep_verify(plan)
     return plan

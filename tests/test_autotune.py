@@ -317,7 +317,13 @@ class TestPrecedence:
         assert plan.report.config_source == "env-override"
         assert plan.report.tuned == cfg.to_meta()  # still auditable
 
-    def test_mismatched_config_refused(self):
+    def test_mismatched_config_degrades_to_default(self):
+        """A config tuned at a different (tile, group) is *stale*, not
+        fatal: it is ignored, recorded as ``config_source="stale-tuned"``,
+        and surfaced by the verifier as a ``tuned.stale-config`` warning
+        — the plan keeps executing on policy defaults."""
+        from repro.analysis.verify import verify_plan
+
         a, b = _mats(7)
         plan = spgemm_plan(a, b, tile=16, group=2, backend="jnp",
                            cache=PlanCache())
@@ -326,8 +332,52 @@ class TestPrecedence:
             values_per_s=1.0, default_values_per_s=1.0, model_rank=0,
             ranking_agreement=1.0, probes=0,
         )
-        with pytest.raises(ValueError, match="tuned config"):
-            plan.apply_tuned_config(cfg)
+        plan.apply_tuned_config(cfg)  # must NOT raise
+        assert plan.tuned_config is None
+        assert plan.report.tuned is None
+        assert plan.report.config_source == "stale-tuned"
+        rep = verify_plan(plan)
+        assert rep.ok  # a warning, not an error
+        stale = [f for f in rep.findings if f.check == "tuned.stale-config"]
+        assert len(stale) == 1 and stale[0].severity == "warning"
+        # Numerics are untouched by the fallback.
+        ref = spgemm_plan(a, b, tile=16, group=2, backend="jnp",
+                          cache=PlanCache())
+        assert np.array_equal(plan.execute().data, ref.execute().data)
+
+    def test_drifted_sidecar_rehydrates_with_fallback(self, tmp_path):
+        """Regression: a persisted artifact whose embedded tuned config
+        was hand-drifted (tile no longer matching the symbolic facts)
+        must rehydrate as a working plan on defaults — the old behavior
+        raised out of ``from_artifacts`` and made the artifact
+        unloadable."""
+        from repro.spgemm.plan import SpGEMMPlan
+
+        a, b = _mats(8)
+        a, b = a.sum_duplicates(), b.sum_duplicates()  # canonical order
+        plan = spgemm_plan(a, b, tile=16, group=2, backend="jnp",
+                           cache=PlanCache())
+        cfg = TunedConfig(
+            tile=(16, 16, 16), group=2, chunk_bytes=4096, pipeline_depth=3,
+            values_per_s=2.0, default_values_per_s=1.0, model_rank=0,
+            ranking_agreement=1.0, probes=4,
+        )
+        plan.apply_tuned_config(cfg)
+        arrays, meta = plan.persist_artifacts()
+        # Hand-drift the sidecar record: claims a tile the plan was
+        # never built at.
+        meta = dict(meta)
+        drifted = dict(meta["tuned_config"])
+        drifted["tile"] = [8, 8, 8]
+        meta["tuned_config"] = drifted
+        back = SpGEMMPlan.from_artifacts(
+            arrays, meta, backend="jnp", pattern_key=plan.report.pattern_key,
+            a_vals=a.val, b_vals=b.val, a_pattern=a, b_pattern=b,
+        )
+        assert back.tuned_config is None
+        assert back.report.config_source == "stale-tuned"
+        assert back._stale_tuned is not None
+        assert np.array_equal(back.execute().data, plan.execute().data)
 
 
 class TestBitwise:
